@@ -1,0 +1,40 @@
+"""Shared benchmark scaffolding: the paper-world builder + CSV emission."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.config import FLConfig
+from repro.core import channel
+from repro.data import dirichlet_partition, make_mnist_like
+
+
+@dataclasses.dataclass
+class World:
+    dataset: object
+    cell: channel.CellConfig
+    shards: list
+
+
+def build_world(*, num_devices: int, num_samples: int = 6000, seed: int = 0) -> World:
+    ds = make_mnist_like(num_samples=num_samples, seed=seed)
+    cell = channel.CellConfig(num_devices=num_devices)
+    shards = dirichlet_partition(ds.y_train, num_devices, seed=seed)
+    return World(ds, cell, shards)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row: name,us_per_call,derived (benchmarks/run.py contract)."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, *, repeats: int = 3) -> float:
+    """Median wall time of fn() in microseconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = [
+    ("power", "benchmarks.power_bench"),           # §III-C / ref [8]
+    ("scheduling", "benchmarks.scheduling_bench"), # §III-A/B Algorithm 2
+    ("kernels", "benchmarks.kernel_bench"),        # §II-B codec hot-spot
+    ("compression", "benchmarks.compression_stats"),  # §II-B adaptive bits
+    ("fig5", "benchmarks.fig5_noma_vs_tdma"),      # Fig. 5
+    ("fig6", "benchmarks.fig6_schemes"),           # Fig. 6
+    ("roofline", "benchmarks.roofline_bench"),     # EXPERIMENTS §Roofline
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    import importlib
+
+    failures = []
+    for name, module in SUITES:
+        if args.only and args.only != name:
+            continue
+        print(f"# === {name} ({module}) ===", flush=True)
+        try:
+            importlib.import_module(module).main(fast=args.fast)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED suites: {failures}")
+        sys.exit(1)
+    print("# all suites ok")
+
+
+if __name__ == "__main__":
+    main()

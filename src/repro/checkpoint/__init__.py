@@ -1,0 +1,1 @@
+from repro.checkpoint.msgpack_ckpt import load_checkpoint, save_checkpoint

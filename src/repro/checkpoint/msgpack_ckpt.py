@@ -1,0 +1,72 @@
+"""Checkpointing: pytree <-> msgpack with zstd compression.
+
+Arrays are stored as (dtype, shape, raw bytes); the tree structure is
+serialized as nested dicts/lists. Restores onto host then device_put — good
+enough for the paper-scale sims and smoke configs (the multi-pod path would
+use a sharded writer per host; out of scope for a CPU container, noted in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+_ARRAY_KEY = "__array__"
+_SCALAR_KEY = "__scalar__"
+
+
+def _encode(node):
+    if isinstance(node, (jax.Array, np.ndarray)):
+        arr = np.asarray(node)
+        return {
+            _ARRAY_KEY: True,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    if isinstance(node, (int, float, bool, str)) or node is None:
+        return {_SCALAR_KEY: True, "value": node}
+    if isinstance(node, dict):
+        return {"__dict__": {k: _encode(v) for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        return {
+            "__list__": [_encode(v) for v in node],
+            "tuple": isinstance(node, tuple),
+        }
+    raise TypeError(f"cannot checkpoint node of type {type(node)}")
+
+
+def _decode(node):
+    if _ARRAY_KEY in node:
+        arr = np.frombuffer(node["data"], dtype=np.dtype(node["dtype"]))
+        return jnp.asarray(arr.reshape(node["shape"]))
+    if _SCALAR_KEY in node:
+        return node["value"]
+    if "__dict__" in node:
+        return {k: _decode(v) for k, v in node["__dict__"].items()}
+    if "__list__" in node:
+        items = [_decode(v) for v in node["__list__"]]
+        return tuple(items) if node["tuple"] else items
+    raise TypeError(f"bad checkpoint node: {node.keys()}")
+
+
+def save_checkpoint(path: str, tree) -> None:
+    payload = msgpack.packb(_encode(tree), use_bin_type=True)
+    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(comp)
+    os.replace(tmp, path)  # atomic on POSIX
+
+
+def load_checkpoint(path: str):
+    with open(path, "rb") as f:
+        comp = f.read()
+    payload = zstandard.ZstdDecompressor().decompress(comp)
+    return _decode(msgpack.unpackb(payload, raw=False, strict_map_key=False))

@@ -1,0 +1,169 @@
+"""Configuration system: model configs, input shapes, FL/cell settings.
+
+Every assigned architecture provides a module in ``repro.configs`` exposing
+``CONFIG`` (the exact published config, used only via the dry-run) and
+``SMOKE`` (a reduced same-family variant for CPU tests). ``--arch <id>``
+resolves through :func:`repro.configs.get_config`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | mlp
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # attention variants
+    qk_norm: bool = False            # qwen3
+    qkv_bias: bool = False           # qwen2
+    sliding_window: Optional[int] = None    # mixtral SWA
+    attention_chunk: Optional[int] = None   # llama4 block-local (iRoPE-style)
+    rope_theta: float = 10_000.0
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_shared_expert: bool = False  # llama4 shared expert
+    capacity_factor: float = 1.25
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_groups: int = 1
+    ssm_chunk: int = 128     # SSD chunk length Q (memory-term lever: the
+                             # within-chunk decay matrix is O(S*Q) per head)
+    ssm_bf16: bool = False   # keep the SSD einsum chain in bf16 (decay/
+                             # cumsum math stays fp32) — §Perf pair A lever
+    # hybrid (zamba2): one shared attention block every N mamba blocks
+    hybrid_attn_every: int = 6
+    # enc-dec (seamless)
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # frame-embedding length from the stub frontend
+    # vlm: one cross-attention layer every N self-attention layers
+    cross_attn_every: int = 0
+    num_image_tokens: int = 0
+    # numerics
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    source: str = ""                 # citation for the config
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    def padded_heads(self, shards: int = 16) -> int:
+        """Q heads padded up so the head axis shards (qwen2: 14 -> 16)."""
+        return _round_up(self.num_heads, shards) if self.num_heads else 0
+
+    def padded_kv_heads(self, shards: int = 16) -> int:
+        """KV heads replicated up to the shard count when kv < shards
+        (MaxText-style GQA replication; DESIGN.md §4)."""
+        if not self.num_kv_heads:
+            return 0
+        if self.num_kv_heads >= shards:
+            return self.num_kv_heads
+        assert shards % self.num_kv_heads == 0 or self.num_kv_heads % shards == 0
+        return shards
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, 256)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (approximate for exotic families)."""
+        d, v = self.d_model, self.padded_vocab
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        hd = self.resolved_head_dim
+        if self.family in ("dense", "moe", "vlm", "encdec"):
+            attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+            if self.num_experts:
+                ff = self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+                if self.moe_shared_expert:
+                    ff += 3 * d * self.d_ff
+            else:
+                ff = 3 * d * self.d_ff
+            per_layer = attn + ff + 2 * d
+        elif self.family in ("ssm", "hybrid"):
+            d_in = self.ssm_expand * d
+            nheads = d_in // self.ssm_head_dim
+            per_layer = (
+                d * (2 * d_in + 2 * self.ssm_groups * self.ssm_state + nheads)
+                + d_in * d
+                + self.ssm_conv_width * (d_in + 2 * self.ssm_groups * self.ssm_state)
+                + 2 * nheads + d_in + 2 * d
+            )
+        total = emb + self.num_layers * per_layer
+        if self.family == "hybrid":
+            attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+            total += attn + 3 * d * self.d_ff + 2 * d  # one shared block
+        if self.family == "encdec":
+            total += self.encoder_layers * (per_layer)
+            total += self.num_layers * (d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d + d)
+        if self.family == "vlm" and self.cross_attn_every:
+            n_cross = self.num_layers // self.cross_attn_every
+            total += n_cross * (d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d + d)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — differs from total only for MoE."""
+        if not self.num_experts:
+            return self.param_count()
+        d = self.d_model
+        dense_like = dataclasses.replace(self, num_experts=0, experts_per_token=0)
+        base = dense_like.param_count()
+        active_ff = self.experts_per_token * 3 * d * self.d_ff
+        shared = 3 * d * self.d_ff if self.moe_shared_expert else 0
+        # base already counts one dense FFN; replace it with active experts.
+        return int(base + self.num_layers * (active_ff + shared - 3 * d * self.d_ff))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    """Paper §IV system settings (Table I + text)."""
+
+    num_devices: int = 300           # M
+    group_size: int = 3              # K
+    num_rounds: int = 35             # T
+    learning_rate: float = 0.01     # eta
+    batch_size: int = 10             # B
+    local_epochs: int = 1
+    scheduler: str = "lazy-gwmin"    # lazy-gwmin | literal-gwmin | random | round-robin | proportional-fair
+    power_mode: str = "mapel"        # mapel | max
+    compression: str = "adaptive"    # adaptive | none
+    paper_exact_range: bool = False  # DoReFa fixed [-1,1] range (Eq. 7)
+    seed: int = 0

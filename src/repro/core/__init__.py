@@ -1,0 +1,11 @@
+"""The paper's contribution: NOMA FL scheduling, power allocation,
+adaptive compression, and the FedAvg runtime.
+
+ - channel.py      : cell + fading channel model            (paper §II-A)
+ - noma.py         : SIC decoding, SINR, rates              (paper Eq. 4-6)
+ - power.py        : MAPEL polyblock power allocation        (paper §III-C)
+ - scheduling.py   : MWIS scheduling graph + Algorithm 2     (paper §III-A/B)
+ - quantization.py : DoReFa adaptive gradient quantization   (paper §II-B)
+ - compression.py  : gradient pytree codec over the kernels  (paper Alg. 1)
+ - fl.py           : FedAvg over the simulated NOMA cell     (paper §IV)
+"""

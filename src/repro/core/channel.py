@@ -1,0 +1,105 @@
+"""Wireless channel model (paper §II-A).
+
+Channel gain of device k at round t:  h_k^t = L_k^t * h0^t
+  - L_k^t : large-scale free-space path loss
+        L = sqrt(delta * lambda^2) / (4*pi*d^(alpha/2))
+    (the paper writes L = sqrt(delta)*lambda / (4 pi d^{alpha/2}); delta is the
+    combined antenna gain, lambda the carrier wavelength, d the PS distance,
+    alpha the path-loss exponent).
+  - h0^t : small-scale Rayleigh fading, h0 ~ CN(0, 1).
+
+All quantities are vectorized over devices and generated with explicit JAX PRNG
+keys so every simulation is reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Speed of light (m/s).
+_C = 299_792_458.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CellConfig:
+    """Static description of the cell (paper §IV settings by default)."""
+
+    num_devices: int = 300          # M
+    cell_radius_m: float = 500.0    # PS cell size
+    min_distance_m: float = 10.0    # keep devices out of the antenna near field
+    carrier_hz: float = 2.4e9       # typical ISM carrier (paper does not state one)
+    path_loss_exp: float = 3.0      # alpha
+    antenna_gain: float = 1.0       # delta (unit gain)
+    bandwidth_hz: float = 4e6       # uplink bandwidth B
+    noise_dbm_per_hz: float = -174.0
+    max_power_w: float = 0.01       # p^max
+    slot_seconds: float = 0.2       # uplink slot t
+    downlink_bandwidth_hz: float = 10e6
+    downlink_power_w: float = 0.2
+
+    @property
+    def wavelength_m(self) -> float:
+        return _C / self.carrier_hz
+
+    @property
+    def noise_power_w(self) -> float:
+        """Total noise power over the uplink band: sigma^2 = N0 * B (watts)."""
+        n0_w_per_hz = 10.0 ** (self.noise_dbm_per_hz / 10.0) * 1e-3
+        return n0_w_per_hz * self.bandwidth_hz
+
+
+def sample_positions(key: jax.Array, cfg: CellConfig) -> jax.Array:
+    """Uniformly distribute devices in the cell disk. Returns distances (M,)."""
+    k1, _ = jax.random.split(key)
+    # Uniform over the disk => CDF(r) = r^2 / R^2 => r = R * sqrt(u).
+    u = jax.random.uniform(k1, (cfg.num_devices,))
+    r = cfg.cell_radius_m * jnp.sqrt(u)
+    return jnp.maximum(r, cfg.min_distance_m)
+
+
+def large_scale_gain(distances_m: jax.Array, cfg: CellConfig) -> jax.Array:
+    """Free-space path-loss amplitude gain L_k (linear, amplitude domain)."""
+    num = jnp.sqrt(cfg.antenna_gain) * cfg.wavelength_m
+    den = 4.0 * jnp.pi * distances_m ** (cfg.path_loss_exp / 2.0)
+    return num / den
+
+
+def sample_small_scale(key: jax.Array, shape) -> jax.Array:
+    """|h0| with h0 ~ CN(0,1) (Rayleigh magnitude, E[|h0|^2] = 1)."""
+    kr, ki = jax.random.split(key)
+    re = jax.random.normal(kr, shape) * jnp.sqrt(0.5)
+    im = jax.random.normal(ki, shape) * jnp.sqrt(0.5)
+    return jnp.sqrt(re**2 + im**2)
+
+
+def sample_channel_gains(
+    key: jax.Array, distances_m: jax.Array, cfg: CellConfig
+) -> jax.Array:
+    """Per-device amplitude channel gain h_k = L_k * |h0| for one round."""
+    ls = large_scale_gain(distances_m, cfg)
+    ss = sample_small_scale(key, distances_m.shape)
+    return ls * ss
+
+
+def sample_round_channels(
+    key: jax.Array, distances_m: jax.Array, cfg: CellConfig, num_rounds: int
+) -> jax.Array:
+    """Channel gains for every round: (T, M). Block fading across rounds."""
+    keys = jax.random.split(key, num_rounds)
+    return jax.vmap(lambda k: sample_channel_gains(k, distances_m, cfg))(keys)
+
+
+def downlink_time_seconds(
+    model_bits: float, gains: jax.Array, cfg: CellConfig
+) -> jax.Array:
+    """Broadcast time T_d = max_k I / (B_d log2(1 + p_d * gamma_k)) (paper §IV).
+
+    gamma_k is the received downlink SNR at device k.
+    """
+    n0_w_per_hz = 10.0 ** (cfg.noise_dbm_per_hz / 10.0) * 1e-3
+    noise = n0_w_per_hz * cfg.downlink_bandwidth_hz
+    snr = cfg.downlink_power_w * gains.astype(jnp.float32) ** 2 / noise
+    rate = cfg.downlink_bandwidth_hz * jnp.log2(1.0 + snr)
+    return jnp.max(model_bits / rate)

@@ -1,0 +1,108 @@
+"""Gradient pytree codec built on the DoReFa quantizer (paper Algorithm 1).
+
+This is the layer the distributed trainer calls: it measures the payload,
+derives the adaptive bit-width from the device's NOMA bit budget, and
+quantize-dequantizes the whole gradient pytree (simulating the uplink).
+
+``encode_decode_tree`` is the fused q->dq used inside jitted train steps (no
+packing — XLA fuses it into the backward epilogue). ``encode_tree`` /
+``decode_tree`` produce the packed integer representation used by the
+paper-scale FL simulator for honest byte accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization as q
+from repro.kernels import ops as kops
+
+
+def payload_bits(tree, *, full_bits: int = 32) -> int:
+    """Uncompressed payload size I in bits (paper: 32 bits/param)."""
+    return sum(int(x.size) * full_bits for x in jax.tree_util.tree_leaves(tree))
+
+
+@dataclasses.dataclass
+class EncodedTree:
+    """Packed quantized gradient pytree (what actually crosses the uplink)."""
+
+    codes: Any              # pytree of int arrays (packed)
+    scales: Any             # pytree of fp32 scalars
+    bits: int
+    treedef: Any
+    shapes: list
+    total_bits: int         # honest on-air size, incl. per-tensor scales
+
+
+def encode_tree(tree, bits: int, *, use_pallas: bool = False) -> EncodedTree:
+    """Quantize + bit-pack every leaf. Static ``bits``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    codes, scales, shapes = [], [], []
+    total = 0
+    for leaf in leaves:
+        c, s = kops.quantize_pack(leaf.reshape(-1), bits, use_pallas=use_pallas)
+        codes.append(c)
+        scales.append(s)
+        shapes.append(leaf.shape)
+        # b+1 bits per element (sign-magnitude code) + one fp32 scale.
+        total += leaf.size * (bits + 1) + 32
+    return EncodedTree(codes, scales, bits, treedef, shapes, total)
+
+
+def decode_tree(enc: EncodedTree, *, use_pallas: bool = False):
+    leaves = []
+    for c, s, shape in zip(enc.codes, enc.scales, enc.shapes):
+        size = int(np.prod(shape)) if shape else 1
+        x = kops.unpack_dequantize(c, s, enc.bits, size, use_pallas=use_pallas)
+        leaves.append(x.reshape(shape))
+    return jax.tree_util.tree_unflatten(enc.treedef, leaves)
+
+
+def encode_decode_tree(tree, bits, *, paper_exact: bool = False):
+    """Fused quantize->dequantize of a pytree (traceable, ``bits`` may be traced)."""
+    return q.quantize_tree(tree, bits, paper_exact=paper_exact)
+
+
+def adaptive_bits_for_budget(tree, budget_bits) -> jax.Array:
+    """Paper §II-B: b = floor(32/r), r = max(I/c, 1)."""
+    return q.adaptive_bits(payload_bits(tree), budget_bits)
+
+
+def error_feedback_optimizer(optimizer, bits: int, *, paper_exact: bool = False):
+    """BEYOND-PAPER: error-feedback (EF) wrapper around any optimizer.
+
+    Plain DoReFa quantization (paper Eq. 7) discards the rounding residual
+    every round; EF [Seide et al. 2014; Karimireddy et al. 2019] adds the
+    previous round's residual back before quantizing, making the compressed
+    update unbiased over time:
+
+        adj_t = g_t + r_{t-1};  q_t = Q_b(adj_t);  r_t = adj_t - q_t.
+
+    At paper scale C1 (each device scheduled once) makes per-device EF moot;
+    at LLM scale (one quantized uplink per optimizer step) it recovers most
+    of the accuracy lost at b <= 4 bits (see examples/train_llm.py --ef and
+    tests/test_compression.py::test_error_feedback_identity).
+    """
+    from repro.optim.optimizers import Optimizer
+
+    def init(params):
+        return {
+            "inner": optimizer.init(params),
+            "residual": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        adj = jax.tree_util.tree_map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, state["residual"])
+        q = encode_decode_tree(adj, bits, paper_exact=paper_exact)
+        residual = jax.tree_util.tree_map(lambda a, qq: a - qq, adj, q)
+        new_params, inner = optimizer.update(q, state["inner"], params)
+        return new_params, {"inner": inner, "residual": residual}
+
+    return Optimizer(init, update)

@@ -1,0 +1,73 @@
+"""NOMA uplink with successive interference cancellation (paper §II-A).
+
+The PS decodes the K superposed uplink signals strongest-received-power first.
+With users sorted so that p_1 h_1^2 > p_2 h_2^2 > ... > p_K h_K^2 the SINR of
+user k (Eq. 5) is
+
+    gamma_k = p_k h_k^2 / (sum_{j>k} p_j h_j^2 + sigma^2)
+
+and the last user sees only noise. Rates are spectral efficiencies
+R_k = log2(1 + gamma_k) (Eq. 6); multiply by bandwidth for bit/s.
+
+Everything here is pure jnp and differentiable in the powers, which the MAPEL
+power-allocation verifier exploits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sic_order(powers: jax.Array, gains: jax.Array) -> jax.Array:
+    """Return decode order (indices into the group, strongest first)."""
+    rx = powers * gains**2
+    return jnp.argsort(-rx)
+
+
+def sinr(powers: jax.Array, gains: jax.Array, noise_power: float) -> jax.Array:
+    """Per-user SINR under SIC decoding, in the *input* user order.
+
+    powers, gains: (K,). Decoding is strongest-received first; each user is
+    interfered only by users decoded after it.
+    """
+    rx = powers * gains**2                          # received powers (K,)
+    order = jnp.argsort(-rx)                        # decode order
+    rx_sorted = rx[order]
+    # Interference for position k = sum of received powers of positions > k.
+    tail = jnp.cumsum(rx_sorted[::-1])[::-1] - rx_sorted
+    sinr_sorted = rx_sorted / (tail + noise_power)
+    # Scatter back to input order.
+    out = jnp.zeros_like(sinr_sorted)
+    return out.at[order].set(sinr_sorted)
+
+
+def rates(powers: jax.Array, gains: jax.Array, noise_power: float) -> jax.Array:
+    """Spectral efficiency per user (bit/s/Hz), input order (Eq. 6)."""
+    return jnp.log2(1.0 + sinr(powers, gains, noise_power))
+
+
+def bit_budget(
+    powers: jax.Array,
+    gains: jax.Array,
+    noise_power: float,
+    bandwidth_hz: float,
+    slot_seconds: float,
+) -> jax.Array:
+    """Allowable transmission bits c_k = R_k * B * t for each user (§II-B)."""
+    return rates(powers, gains, noise_power) * bandwidth_hz * slot_seconds
+
+
+def weighted_sum_rate(
+    powers: jax.Array,
+    gains: jax.Array,
+    weights: jax.Array,
+    noise_power: float,
+) -> jax.Array:
+    """Objective inner term  sum_k w_k R_k  for one NOMA group (Eq. 8a)."""
+    return jnp.sum(weights * rates(powers, gains, noise_power))
+
+
+def tdma_rates(powers: jax.Array, gains: jax.Array, noise_power: float) -> jax.Array:
+    """Interference-free rates used by the TDMA baseline (each user alone)."""
+    snr = powers * gains**2 / noise_power
+    return jnp.log2(1.0 + snr)

@@ -1,0 +1,83 @@
+"""DoReFa-style adaptive gradient quantization (paper §II-B, Eq. 7).
+
+    q(pi) = (1/a) * round(a * pi),   a = 2^b - 1
+
+The paper assumes gradients lie in [-1, 1]. For arbitrary models we add an
+optional per-tensor max-abs scale (one fp32 per tensor, counted in the bit
+budget); with ``scale=1`` the codec is bit-exact to Eq. (7).
+
+Bit-width adaptation (paper §II-B): device k scheduled with rate R_k may push
+``c_k = R_k * B * t`` bits in its slot. With a full-precision payload of I
+bits, the compression ratio is r_k = max(I / c_k, 1) and the quantization
+bit-length b_k = floor(32 / r_k), clamped to [1, 32].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dorefa_levels(bits) -> jax.Array:
+    """a = 2^b - 1 (number of quantization intervals)."""
+    return jnp.asarray(2.0, jnp.float32) ** jnp.asarray(bits, jnp.float32) - 1.0
+
+
+def quantize(x: jax.Array, bits, *, scale=None) -> jax.Array:
+    """Quantize-dequantize x to b bits (Eq. 7). bits may be a traced scalar.
+
+    With ``scale`` (per-tensor max-abs by default) values are normalized into
+    [-1, 1] first; pass ``scale=1.0`` for the paper-exact codec.
+    """
+    a = dorefa_levels(bits)
+    xf = x.astype(jnp.float32)
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12)
+    xn = xf / scale
+    q = jnp.round(a * jnp.clip(xn, -1.0, 1.0)) / a
+    out = q * scale
+    # b >= 32 means "no compression" — pass through exactly.
+    return jnp.where(jnp.asarray(bits) >= 32, xf, out).astype(x.dtype)
+
+
+def quantize_int(x: jax.Array, bits: int, *, scale=None):
+    """Quantize to integer codes (for bit accounting / packing).
+
+    Returns (codes int32 in [-a, a], scale). Static ``bits`` only.
+    """
+    a = float(2 ** int(bits) - 1)
+    xf = x.astype(jnp.float32)
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12)
+    codes = jnp.round(a * jnp.clip(xf / scale, -1.0, 1.0)).astype(jnp.int32)
+    return codes, scale
+
+
+def dequantize_int(codes: jax.Array, bits: int, scale) -> jax.Array:
+    a = float(2 ** int(bits) - 1)
+    return (codes.astype(jnp.float32) / a) * scale
+
+
+def compression_ratio(payload_bits, budget_bits) -> jax.Array:
+    """r = max(I / c, 1) (paper §II-B)."""
+    return jnp.maximum(payload_bits / jnp.maximum(budget_bits, 1e-9), 1.0)
+
+
+def adaptive_bits(payload_bits, budget_bits) -> jax.Array:
+    """b = floor(32 / r), clamped to [1, 32]."""
+    r = compression_ratio(payload_bits, budget_bits)
+    return jnp.clip(jnp.floor(32.0 / r), 1.0, 32.0).astype(jnp.int32)
+
+
+def quantize_tree(grads, bits, *, paper_exact: bool = False):
+    """Quantize-dequantize every leaf of a gradient pytree to ``bits`` bits.
+
+    paper_exact=True uses the fixed [-1,1] range of Eq. (7); otherwise each
+    leaf carries a per-tensor max-abs scale.
+    """
+    scale = 1.0 if paper_exact else None
+    return jax.tree_util.tree_map(lambda g: quantize(g, bits, scale=scale), grads)
+
+
+def quantization_error(x: jax.Array, bits) -> jax.Array:
+    """RMS quantization error (used by tests / benchmarks)."""
+    return jnp.sqrt(jnp.mean(jnp.square(x - quantize(x, bits))))

@@ -1,0 +1,368 @@
+"""User scheduling as maximum-weight independent set (paper §III).
+
+Scheduling graph (§III-A): a vertex v = (S, t) is a K-subset S of devices
+proposed for round t; there are C(M, K) * T vertices. Edges connect vertices
+that violate
+  C1 (device scheduled more than once): S_i and S_j share a device, t_i != t_j
+  C2 (one group per round): t_i == t_j.
+An independent set with T vertices is a complete schedule; vertex weight
+w(v) = sum_{k in S} w_k R_k^t makes the MWIS the max-weighted-sum-rate
+schedule (Eq. 9-10).
+
+Three solvers:
+  * ``literal_graph_schedule`` — the paper's Algorithm 2 (GWMIN greedy) on the
+    explicitly constructed graph. Exact fidelity; exponential memory, use for
+    M up to ~12.
+  * ``lazy_greedy_schedule`` — provably equivalent to Algorithm 2 without
+    materializing the graph (see note below); scales to the paper's M=300.
+  * ``brute_force_schedule`` — exact optimum by enumeration (tests only).
+
+Equivalence note (DESIGN.md §6.3): in the residual graph after any number of
+GWMIN removals, the remaining vertex set is always {all K-subsets of unused
+devices} x {remaining rounds}, and every vertex has the *same* degree
+beta = (C(A,K)-1) + (T_rem-1) * (C(A,K) - C(A-K,K)), where A = #unused
+devices. With uniform degrees, argmax_{v in Q} w(v)/(beta(v)+1) reduces to
+argmax_v w(v) (the global max-weight vertex is always in Q since
+sum_{u in J(v)} w(u)/(beta+1) <= beta*w(v)/(beta+1) + w(v)/(beta+1) = w(v)).
+So Algorithm 2 == repeatedly take the max-weight (subset, round) among unused
+devices and remaining rounds. ``tests/test_scheduling.py`` checks the two
+produce identical schedules on instances where the literal graph fits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import power as power_lib
+
+PowerFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
+# (gains_K, weights_K) -> powers_K
+
+
+# --------------------------------------------------------------------------
+# Shared helpers
+# --------------------------------------------------------------------------
+
+def make_power_fn(mode: str, pmax: float, noise_power: float) -> PowerFn:
+    """'max' -> everyone at p^max; 'mapel' -> optimal MLFP allocation."""
+    if mode == "max":
+        return lambda g, w: np.full(len(g), pmax)
+    if mode == "mapel":
+        return lambda g, w: power_lib.mapel(g, w, pmax, noise_power, eps=1e-3).powers
+    raise ValueError(f"unknown power mode {mode!r}")
+
+
+def group_weighted_rate(
+    subset: Sequence[int],
+    t: int,
+    gains_tm: np.ndarray,
+    weights_m: np.ndarray,
+    power_fn: PowerFn,
+    noise_power: float,
+):
+    """Weighted sum rate (and powers, rates) of scheduling `subset` at round t."""
+    idx = np.asarray(subset)
+    g = gains_tm[t, idx]
+    w = weights_m[idx]
+    p = power_fn(g, w)
+    rates = _rates(p, g, noise_power)
+    return float(np.sum(w * rates)), p, rates
+
+
+def _rates(powers, gains, noise_power):
+    rx = np.asarray(powers) * np.asarray(gains) ** 2
+    order = np.argsort(-rx)
+    rx_s = rx[order]
+    tail = np.concatenate([np.cumsum(rx_s[::-1])[::-1][1:], [0.0]])
+    sinr = rx_s / (tail + noise_power)
+    out = np.zeros_like(sinr)
+    out[order] = np.log2(1.0 + sinr)
+    return out
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A complete schedule: device groups, powers and rates per round."""
+
+    rounds: list            # list[T] of tuple[int, ...] device ids
+    powers: list            # list[T] of np.ndarray (K,)
+    rates: list             # list[T] of np.ndarray (K,) spectral efficiencies
+    weighted_sum_rate: float
+    method: str
+
+    def scheduled_devices(self) -> set:
+        return set(itertools.chain.from_iterable(self.rounds))
+
+    def validate(self, num_devices: int, k: int):
+        """Assert constraints C1/C2 hold."""
+        seen = set()
+        for grp in self.rounds:
+            assert len(grp) <= k, "C2 violated"
+            for d in grp:
+                assert 0 <= d < num_devices
+                assert d not in seen, "C1 violated"
+                seen.add(d)
+        return True
+
+
+def _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, method):
+    powers, rates, total = [], [], 0.0
+    for t, grp in enumerate(rounds):
+        val, p, r = group_weighted_rate(
+            grp, t, gains_tm, weights_m, power_fn, noise_power
+        )
+        powers.append(p)
+        rates.append(r)
+        total += val
+    return Schedule(list(map(tuple, rounds)), powers, rates, total, method)
+
+
+# --------------------------------------------------------------------------
+# Literal Algorithm 2 on the explicit scheduling graph
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SchedulingGraph:
+    vertices: list          # list of (subset tuple, t)
+    weights: np.ndarray     # (V,)
+    adjacency: list         # list[V] of set[int]
+
+    def degree(self, v: int) -> int:
+        return len(self.adjacency[v])
+
+
+def build_scheduling_graph(
+    gains_tm: np.ndarray,
+    weights_m: np.ndarray,
+    k: int,
+    power_fn: PowerFn,
+    noise_power: float,
+) -> SchedulingGraph:
+    """Explicit graph with C(M,K)*T vertices (paper §III-A)."""
+    num_rounds, num_devices = gains_tm.shape
+    vertices = [
+        (subset, t)
+        for t in range(num_rounds)
+        for subset in itertools.combinations(range(num_devices), k)
+    ]
+    weights = np.array(
+        [
+            group_weighted_rate(s, t, gains_tm, weights_m, power_fn, noise_power)[0]
+            for (s, t) in vertices
+        ]
+    )
+    adjacency = [set() for _ in vertices]
+    for i, (si, ti) in enumerate(vertices):
+        set_i = set(si)
+        for j in range(i + 1, len(vertices)):
+            sj, tj = vertices[j]
+            if ti == tj or set_i & set(sj):
+                adjacency[i].add(j)
+                adjacency[j].add(i)
+    return SchedulingGraph(vertices, weights, adjacency)
+
+
+def gwmin_mwis(graph: SchedulingGraph) -> list:
+    """Algorithm 2: greedy maximum-weight independent set (GWMIN).
+
+    Returns selected vertex indices. J(v) = v and its neighbours; beta(v) the
+    degree; Q = {v : w(v) >= sum_{u in J(v)} w(u)/(beta(u)+1)};
+    v* = argmax_{v in Q} w(v)/(beta(v)+1).
+    """
+    alive = set(range(len(graph.vertices)))
+    adj = {v: set(graph.adjacency[v]) for v in alive}
+    w = graph.weights
+    selected = []
+    while alive:
+        beta = {v: len(adj[v]) for v in alive}
+        q = []
+        for v in alive:
+            closed = adj[v] | {v}
+            thresh = sum(w[u] / (beta[u] + 1) for u in closed)
+            if w[v] >= thresh - 1e-12:
+                q.append(v)
+        if not q:  # theoretical fallback; GWMIN guarantees Q nonempty
+            q = list(alive)
+        v_star = max(q, key=lambda v: w[v] / (beta[v] + 1))
+        selected.append(v_star)
+        remove = adj[v_star] | {v_star}
+        alive -= remove
+        for v in alive:
+            adj[v] -= remove
+    return selected
+
+
+def literal_graph_schedule(
+    gains_tm, weights_m, k, *, power_mode="max", pmax=0.01, noise_power=1e-13
+) -> Schedule:
+    """Paper-exact Algorithm 2 (explicit graph). Small M only."""
+    power_fn = make_power_fn(power_mode, pmax, noise_power)
+    graph = build_scheduling_graph(gains_tm, weights_m, k, power_fn, noise_power)
+    chosen = gwmin_mwis(graph)
+    num_rounds = gains_tm.shape[0]
+    rounds = [()] * num_rounds
+    for v in chosen:
+        subset, t = graph.vertices[v]
+        rounds[t] = subset
+    return _finalize(
+        rounds, gains_tm, weights_m, power_fn, noise_power, "literal-gwmin"
+    )
+
+
+# --------------------------------------------------------------------------
+# Lazy (scalable) equivalent of Algorithm 2
+# --------------------------------------------------------------------------
+
+def _best_subset_for_round(
+    t, avail, gains_tm, weights_m, k, power_fn, noise_power, candidate_pool
+):
+    """Best K-subset of `avail` for round t.
+
+    Exact when len(avail) is small; otherwise enumerates subsets of the
+    ``candidate_pool`` strongest devices (by singleton weighted rate), which
+    preserves the greedy's behaviour in practice (weak devices never enter
+    the argmax group).
+    """
+    avail = np.asarray(sorted(avail))
+    if len(avail) > candidate_pool:
+        # Proxy: weighted interference-free rate of each device alone.
+        g = gains_tm[t, avail]
+        solo = weights_m[avail] * np.log2(1.0 + (0.01 * g**2) / noise_power)
+        keep = avail[np.argsort(-solo)[:candidate_pool]]
+    else:
+        keep = avail
+    best_val, best_sub = -np.inf, None
+    for subset in itertools.combinations(sorted(keep.tolist()), min(k, len(keep))):
+        val, _, _ = group_weighted_rate(
+            subset, t, gains_tm, weights_m, power_fn, noise_power
+        )
+        if val > best_val:
+            best_val, best_sub = val, subset
+    return best_val, best_sub
+
+
+def lazy_greedy_schedule(
+    gains_tm,
+    weights_m,
+    k,
+    *,
+    power_mode="max",
+    pmax=0.01,
+    noise_power=1e-13,
+    candidate_pool=16,
+) -> Schedule:
+    """Graph-free Algorithm 2 (see module docstring for the equivalence).
+
+    With power_mode="mapel" the subset *search* runs at max power and MAPEL
+    refines only the selected groups (two-stage; a MAPEL solve per candidate
+    subset — the literal paper procedure — is O(C(pool,K)) solves per round
+    and only reorders near-ties). literal_graph_schedule keeps the paper's
+    exact per-vertex power allocation."""
+    search_fn = make_power_fn("max", pmax, noise_power)
+    power_fn = make_power_fn(power_mode, pmax, noise_power)
+    num_rounds, num_devices = gains_tm.shape
+    avail = set(range(num_devices))
+    remaining = set(range(num_rounds))
+    rounds = [()] * num_rounds
+    while remaining and len(avail) > 0:
+        # max-weight vertex across all remaining rounds
+        best = (-np.inf, None, None)
+        for t in sorted(remaining):
+            val, sub = _best_subset_for_round(
+                t, avail, gains_tm, weights_m, k, search_fn, noise_power,
+                candidate_pool,
+            )
+            if val > best[0]:
+                best = (val, sub, t)
+        _, subset, t = best
+        if subset is None:
+            break
+        rounds[t] = subset
+        avail -= set(subset)
+        remaining.discard(t)
+    return _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, "lazy-gwmin")
+
+
+# --------------------------------------------------------------------------
+# Exact optimum (tests only)
+# --------------------------------------------------------------------------
+
+def brute_force_schedule(
+    gains_tm, weights_m, k, *, power_mode="max", pmax=0.01, noise_power=1e-13
+) -> Schedule:
+    """Enumerate every feasible schedule (C1/C2) — exponential, tests only."""
+    power_fn = make_power_fn(power_mode, pmax, noise_power)
+    num_rounds, num_devices = gains_tm.shape
+    subsets = list(itertools.combinations(range(num_devices), k))
+    vals = {
+        (s, t): group_weighted_rate(s, t, gains_tm, weights_m, power_fn, noise_power)[0]
+        for t in range(num_rounds)
+        for s in subsets
+    }
+    best_total, best_assign = -np.inf, None
+
+    def rec(t, used, total, assign):
+        nonlocal best_total, best_assign
+        if t == num_rounds:
+            if total > best_total:
+                best_total, best_assign = total, list(assign)
+            return
+        for s in subsets:
+            if used & set(s):
+                continue
+            assign.append(s)
+            rec(t + 1, used | set(s), total + vals[(s, t)], assign)
+            assign.pop()
+
+    rec(0, set(), 0.0, [])
+    return _finalize(
+        best_assign, gains_tm, weights_m, power_fn, noise_power, "brute-force"
+    )
+
+
+# --------------------------------------------------------------------------
+# Baseline schedulers (paper §IV comparisons and ref [6] policies)
+# --------------------------------------------------------------------------
+
+def random_schedule(
+    rng: np.random.Generator, gains_tm, weights_m, k,
+    *, power_mode="max", pmax=0.01, noise_power=1e-13,
+) -> Schedule:
+    """Random scheduling respecting C1 (each device at most once)."""
+    power_fn = make_power_fn(power_mode, pmax, noise_power)
+    num_rounds, num_devices = gains_tm.shape
+    perm = rng.permutation(num_devices)
+    rounds = [tuple(perm[t * k : (t + 1) * k].tolist()) for t in range(num_rounds)]
+    return _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, "random")
+
+
+def round_robin_schedule(
+    gains_tm, weights_m, k, *, power_mode="max", pmax=0.01, noise_power=1e-13
+) -> Schedule:
+    """Round robin: fixed device order, K per round (ref [6] policy)."""
+    power_fn = make_power_fn(power_mode, pmax, noise_power)
+    num_rounds = gains_tm.shape[0]
+    rounds = [tuple(range(t * k, (t + 1) * k)) for t in range(num_rounds)]
+    return _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, "round-robin")
+
+
+def proportional_fair_schedule(
+    gains_tm, weights_m, k, *, power_mode="max", pmax=0.01, noise_power=1e-13
+) -> Schedule:
+    """Per round, pick the K best unused devices by instantaneous gain."""
+    power_fn = make_power_fn(power_mode, pmax, noise_power)
+    num_rounds, num_devices = gains_tm.shape
+    used = set()
+    rounds = []
+    for t in range(num_rounds):
+        avail = np.array([d for d in range(num_devices) if d not in used])
+        order = avail[np.argsort(-gains_tm[t, avail])]
+        grp = tuple(order[:k].tolist())
+        used |= set(grp)
+        rounds.append(grp)
+    return _finalize(
+        rounds, gains_tm, weights_m, power_fn, noise_power, "proportional-fair"
+    )

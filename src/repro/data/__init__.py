@@ -1,0 +1,3 @@
+from repro.data.mnist_like import make_mnist_like
+from repro.data.partition import dirichlet_partition
+from repro.data.tokens import TokenStream, synthetic_token_batches

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (gradient codec).
+
+ - dorefa.py    : quantize / dequantize / fused q->dq (pl.pallas_call + BlockSpec)
+ - aggregate.py : fused dequant + weighted server aggregation
+ - ops.py       : jit'd public wrappers (padding, scale pass, jnp fallback)
+ - ref.py       : pure-jnp oracles used by the allclose test sweeps
+"""

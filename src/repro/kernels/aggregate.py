@@ -1,0 +1,55 @@
+"""Pallas kernel for the PS-side fused dequant + weighted aggregation.
+
+Server aggregation (paper Algorithm 1 line 10): theta update is the weighted
+sum of K dequantized client payloads. Fusing dequant+scale+sum keeps each
+code tile in VMEM exactly once instead of K separate dequant passes +
+K-way add in HBM.
+
+Tiling: codes are (K, R, 128); each grid step loads a (K, BLOCK_ROWS, 128)
+brick (K <= 8 in practice, so the brick stays well under VMEM limits) and
+reduces over K in registers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.dorefa import BLOCK_ROWS, LANE
+
+
+def _aggregate_kernel(c_ref, sw_ref, o_ref, *, a: float, k: int):
+    # c_ref: (K, BLOCK_ROWS, LANE) int32; sw_ref: (K, 2) [scale, weight]
+    acc = jnp.zeros((c_ref.shape[1], c_ref.shape[2]), jnp.float32)
+    for i in range(k):  # K is small and static: unrolled VPU adds
+        coeff = sw_ref[i, 0] * sw_ref[i, 1] / a
+        acc = acc + c_ref[i, :, :].astype(jnp.float32) * coeff
+    o_ref[...] = acc
+
+
+def weighted_aggregate_pallas(
+    codes: jax.Array,     # (K, R, LANE) int32
+    scales: jax.Array,    # (K,)
+    weights: jax.Array,   # (K,)
+    bits: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    k, rows, lane = codes.shape
+    assert lane == LANE and rows % BLOCK_ROWS == 0
+    a = float(2 ** int(bits) - 1)
+    sw = jnp.stack([scales.astype(jnp.float32), weights.astype(jnp.float32)], axis=1)
+    grid = (rows // BLOCK_ROWS,)
+    return pl.pallas_call(
+        functools.partial(_aggregate_kernel, a=a, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, BLOCK_ROWS, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(codes, sw)

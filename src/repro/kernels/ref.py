@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth: kernels are validated against
+these with assert_allclose across shape/dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_codes_ref(x: jnp.ndarray, bits: int, scale) -> jnp.ndarray:
+    """DoReFa integer codes: round(a * clip(x/scale, -1, 1)), a = 2^b - 1."""
+    a = float(2 ** int(bits) - 1)
+    xn = jnp.clip(x.astype(jnp.float32) / scale, -1.0, 1.0)
+    return jnp.round(a * xn).astype(jnp.int32)
+
+
+def dequantize_codes_ref(codes: jnp.ndarray, bits: int, scale) -> jnp.ndarray:
+    a = float(2 ** int(bits) - 1)
+    return codes.astype(jnp.float32) / a * scale
+
+
+def quantize_dequantize_ref(x: jnp.ndarray, bits: int, scale) -> jnp.ndarray:
+    """Fused q->dq (the uplink simulation used inside train steps)."""
+    return dequantize_codes_ref(quantize_codes_ref(x, bits, scale), bits, scale).astype(
+        x.dtype
+    )
+
+
+def weighted_aggregate_ref(
+    codes: jnp.ndarray,    # (K, N) int32
+    scales: jnp.ndarray,   # (K,)
+    weights: jnp.ndarray,  # (K,)
+    bits: int,
+) -> jnp.ndarray:
+    """Server-side fused dequant + weighted sum:  sum_k w_k dq(codes_k)."""
+    a = float(2 ** int(bits) - 1)
+    deq = codes.astype(jnp.float32) / a * scales[:, None]
+    return jnp.sum(weights[:, None] * deq, axis=0)
+
+
+def flash_decode_ref(q, k, v, valid_len):
+    """One-token GQA decode oracle. q: (B,Hkv,G,D); k,v: (B,S,Hkv,D)."""
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(d)
+    pos = jnp.arange(k.shape[1])
+    s = jnp.where(pos[None, None, None, :] < valid_len, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32)).astype(q.dtype)

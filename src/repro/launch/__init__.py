@@ -1,0 +1,1 @@
+"""Launch layer: mesh construction, multi-pod dry-run, trainer, server."""

@@ -1,0 +1,403 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) and emit
+# memory / cost / roofline analysis — run as
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out FILE]
+#
+# The XLA_FLAGS lines above MUST precede any jax import: jax locks the device
+# count at first init (MULTI-POD DRY-RUN step 0). Do not import this module
+# from tests — they should see 1 device.
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import roofline as rl
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models import layers as mlayers
+from repro.models.params import abstract_params
+from repro.optim import adamw
+from repro.sharding import rules as sh
+
+# Principled skips (DESIGN.md §4): long_500k needs sub-quadratic attention.
+SKIPS = {
+    ("qwen3_8b", "long_500k"): "pure full attention",
+    ("granite_34b", "long_500k"): "pure full attention",
+    ("qwen2_0_5b", "long_500k"): "pure full attention",
+    ("mistral_large_123b", "long_500k"): "pure full attention",
+    ("llama_3_2_vision_90b", "long_500k"): "pure full-attention backbone",
+    ("seamless_m4t_medium", "long_500k"): "enc-dec; 500k decode not meaningful",
+}
+
+
+def _batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, batch, mesh):
+    out = {}
+    for k, v in batch.items():
+        out[k] = sh.activation_specs(mesh, v.shape[0], extra_dims=v.ndim - 1)
+    return out
+
+
+def _cache_pspecs(abstract_caches, mesh):
+    def spec(x):
+        if x.ndim >= 4:
+            # (stack..., B, S, H, D) KV caches
+            return sh.cache_pspec(mesh, x.shape, stacked_dims=x.ndim - 4)
+        if x.ndim == 0 or x.shape == ():
+            return P()
+        # SSM/conv states: (stack..., B, ...) — shard batch when divisible
+        ba = sh.batch_axes(mesh)
+        nb = sh.batch_shard(mesh)
+        for i, d in enumerate(x.shape):
+            if d % nb == 0 and d >= nb:
+                return P(*([None] * i), ba, *([None] * (x.ndim - i - 1)))
+        return P(*([None] * x.ndim))
+
+    return jax.tree_util.tree_map(spec, abstract_caches)
+
+
+@dataclasses.dataclass
+class DryrunResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compile_s: float = 0.0
+    bytes_per_device: int = 0
+    roofline: dict = None
+    error: str = ""
+
+
+def probe_plan(cfg):
+    """Reduced-config probes for component-wise FLOP extrapolation.
+
+    Returns (probes, target): each probe is (cfg-overrides, counts) where
+    counts are the multiplicities of each homogeneous component
+    (intercept, unit1[, unit2]) in that probe; `target` is the full
+    config's multiplicities. Per-chip FLOPs/bytes/collective-bytes are
+    linear in these counts, so a least-squares fit over the probes
+    evaluates the full config without ever compiling it unrolled."""
+    if cfg.family == "hybrid":
+        # components: intercept, mamba layer, shared-attn site
+        probes = [
+            ({"num_layers": 3, "hybrid_attn_every": 2}, (1, 3, 1)),
+            ({"num_layers": 2, "hybrid_attn_every": 2}, (1, 2, 1)),
+            ({"num_layers": 4, "hybrid_attn_every": 2}, (1, 4, 2)),
+        ]
+        target = (1, cfg.num_layers, cfg.num_layers // cfg.hybrid_attn_every)
+    elif cfg.family == "vlm":
+        # components: intercept, self layer, cross layer
+        probes = [
+            ({"num_layers": 2, "cross_attn_every": 2}, (1, 1, 1)),
+            ({"num_layers": 4, "cross_attn_every": 2}, (1, 2, 2)),
+            ({"num_layers": 4, "cross_attn_every": 4}, (1, 3, 1)),
+        ]
+        e = cfg.cross_attn_every
+        target = (1, cfg.num_layers - cfg.num_layers // e, cfg.num_layers // e)
+    elif cfg.family == "encdec":
+        probes = [
+            ({"num_layers": 2, "encoder_layers": 2}, (1, 2)),
+            ({"num_layers": 4, "encoder_layers": 4}, (1, 4)),
+        ]
+        target = (1, cfg.num_layers)
+    else:
+        probes = [({"num_layers": 2}, (1, 2)), ({"num_layers": 4}, (1, 4))]
+        target = (1, cfg.num_layers)
+    return probes, target
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            unroll: bool = True, fl_bits: int | None = 8,
+            kv_chunk_train: int = 1024, kv_chunk_decode: int = 4096,
+            cfg_override: dict | None = None, grad_accum: int = 1,
+            remat: bool = True,
+            verbose: bool = True) -> DryrunResult:
+    cfg = get_config(arch)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+
+    model = build_model(cfg, shards=mesh.shape["model"])
+    ab_params = abstract_params(model.schema)
+    pspecs = sh.param_pspecs(model.param_logical_specs(), ab_params, mesh)
+    pshard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+    ab_params = jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        ab_params, pshard,
+    )
+
+    batch = steps.input_specs(cfg, shape)
+    bspecs = _batch_pspecs(cfg, shape, batch, mesh)
+    batch = {
+        k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                sharding=NamedSharding(mesh, bspecs[k]))
+        for k, v in batch.items()
+    }
+
+    def ns(tree):
+        return jax.tree_util.tree_map(
+            lambda x: x if isinstance(x, NamedSharding) else NamedSharding(mesh, x),
+            tree, is_leaf=lambda x: isinstance(x, P),
+        )
+
+    ba = sh.batch_axes(mesh)
+    nb = sh.batch_shard(mesh)
+    nm = mesh.shape["model"]
+
+    def act_hook(x, kind):
+        # pin the canonical megatron layout; skip when dims don't divide
+        batch_ok = x.shape[0] % nb == 0
+        if kind == "residual" and x.ndim == 3:
+            spec = P(ba if batch_ok else None, None, None)
+        elif kind == "heads" and x.ndim == 4:
+            heads_ok = x.shape[2] % nm == 0
+            spec = P(ba if batch_ok else None, None,
+                     "model" if heads_ok else None, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    t0 = time.time()
+    try:
+        mlayers.set_activation_sharding(act_hook)
+        with mesh:
+            if shape.kind == "train":
+                opt = adamw(3e-4)
+                ab_opt = jax.eval_shape(opt.init, ab_params)
+                ospecs = {
+                    k: (P() if k == "step" else pspecs)
+                    for k in ab_opt.keys()
+                }
+                step = steps.make_train_step(
+                    model, opt, fl_bits=fl_bits, unroll=unroll,
+                    kv_chunk=kv_chunk_train, grad_accum=grad_accum,
+                    remat=remat,
+                )
+                lowered = jax.jit(
+                    step,
+                    in_shardings=ns((pspecs, ospecs, bspecs)),
+                    out_shardings=ns((pspecs, ospecs, P())),
+                ).lower(ab_params, ab_opt, batch)
+            elif shape.kind == "prefill":
+                step = steps.make_prefill_step(
+                    model, shape, unroll=unroll, kv_chunk=kv_chunk_train
+                )
+                ab_caches = steps.abstract_cache(model, shape)
+                cspecs = _cache_pspecs(ab_caches, mesh)
+                out_logits = sh.activation_specs(mesh, shape.global_batch,
+                                                 extra_dims=2)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=ns((pspecs, bspecs)),
+                    out_shardings=ns((out_logits, cspecs)),
+                ).lower(ab_params, batch)
+            else:  # decode
+                step = steps.make_serve_step(
+                    model, unroll=unroll, kv_chunk=kv_chunk_decode
+                )
+                ab_caches = steps.abstract_cache(model, shape)
+                cspecs = _cache_pspecs(ab_caches, mesh)
+                ab_caches = jax.tree_util.tree_map(
+                    lambda a, s: jax.ShapeDtypeStruct(
+                        a.shape, a.dtype, sharding=NamedSharding(mesh, s)),
+                    ab_caches, cspecs,
+                )
+                tok_spec = sh.activation_specs(mesh, shape.global_batch,
+                                               extra_dims=1)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=ns((pspecs, cspecs, bspecs)),
+                    out_shardings=ns((tok_spec, cspecs)),
+                ).lower(ab_params, ab_caches, batch)
+
+            compiled = lowered.compile()
+    except Exception as e:  # noqa: BLE001 — dry-run failures are findings
+        return DryrunResult(arch, shape_name, mesh_name, "FAIL",
+                            time.time() - t0, error=f"{type(e).__name__}: {e}")
+    finally:
+        mlayers.set_activation_sharding(None)
+
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    bytes_per_device = int(
+        mem.argument_size_in_bytes + mem.output_size_in_bytes
+        - mem.alias_size_in_bytes + mem.temp_size_in_bytes
+    )
+    hlo = compiled.as_text()
+    roof = rl.analyze(compiled, hlo, cfg, shape, n_chips=n_chips)
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] compile {dt:.1f}s  "
+              f"mem/dev {bytes_per_device/2**30:.2f} GiB  "
+              f"bottleneck {roof.bottleneck}  "
+              f"t=(c {roof.t_compute*1e3:.2f} | m {roof.t_memory*1e3:.2f} | "
+              f"x {roof.t_collective*1e3:.2f}) ms  "
+              f"useful {roof.useful_flops_ratio:.2f}")
+        sys.stdout.flush()
+    return DryrunResult(arch, shape_name, mesh_name, "OK", dt,
+                        bytes_per_device, roof.summary())
+
+
+def roofline_extrapolated(arch: str, shape_name: str, *, fl_bits: int | None = 8,
+                          grad_accum: int = 1, cfg_override: dict | None = None,
+                          verbose: bool = True,
+                          **run_kw) -> DryrunResult:
+    """Component-extrapolated roofline (EXPERIMENTS.md §Roofline).
+
+    Full-depth unrolled compiles are infeasible on the CPU container (hours
+    per pair), so each pair is compiled UNROLLED at 2-3 reduced configs
+    (probe_plan) and the per-chip FLOPs / bytes / collective-bytes are
+    solved component-wise (least squares, exact for these probe designs)
+    and evaluated at the full config. The full-depth *scanned* compile (the
+    ordinary dry-run) separately proves lowering/sharding/memory."""
+    import numpy as np
+
+    cfg = get_config(arch)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    probes, target = probe_plan(cfg)
+    results = []
+    for overrides, counts in probes:
+        r = run_one(arch, shape_name, unroll=True,
+                    cfg_override={**(cfg_override or {}), **overrides},
+                    fl_bits=fl_bits, grad_accum=grad_accum, verbose=False,
+                    **run_kw)
+        if r.status != "OK":
+            return dataclasses.replace(r, mesh=r.mesh + "(extrap)")
+        results.append((r, counts))
+
+    shape = INPUT_SHAPES[shape_name]
+    a_mat = np.array([c for _, c in results], dtype=np.float64)
+    tvec = np.array(target, dtype=np.float64)
+
+    def extrap(key):
+        y = np.array([r.roofline[key] for r, _ in results])
+        coef, *_ = np.linalg.lstsq(a_mat, y, rcond=None)
+        val = float(tvec @ coef)
+        return max(val, float(y.max()))
+
+    flops = extrap("hlo_flops_per_chip")
+    hbm = extrap("hbm_bytes_per_chip")
+    coll = extrap("collective_bytes_per_chip")
+    mf = rl.model_flops(cfg, shape, n_chips=256)
+    terms = {
+        "t_compute_s": flops / rl.PEAK_FLOPS,
+        "t_memory_s": hbm / rl.HBM_BW,
+        "t_collective_s": coll / rl.LINK_BW,
+    }
+    bottleneck = max(terms, key=terms.get).replace("t_", "").replace("_s", "")
+
+    def extrap_coll(kind):
+        y = np.array([r.roofline["collective_breakdown"][kind]
+                      for r, _ in results])
+        coef, *_ = np.linalg.lstsq(a_mat, y, rcond=None)
+        return max(float(tvec @ coef), 0.0)
+
+    summary = {
+        **terms,
+        "bottleneck": bottleneck,
+        "hlo_flops_per_chip": flops,
+        "hbm_bytes_per_chip": hbm,
+        "collective_bytes_per_chip": coll,
+        "collective_breakdown": {
+            k: extrap_coll(k)
+            for k in results[0][0].roofline["collective_breakdown"]
+        },
+        "collective_counts": results[-1][0].roofline["collective_counts"],
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": mf / max(flops, 1.0),
+        "probe_configs": [o for o, _ in probes],
+        "target_counts": list(target),
+    }
+    res = DryrunResult(arch, shape_name, results[0][0].mesh + "(extrap)", "OK",
+                       sum(r.compile_s for r, _ in results),
+                       results[-1][0].bytes_per_device, summary)
+    if verbose:
+        print(f"[{arch} x {shape_name} x roofline-extrap] "
+              f"bottleneck {bottleneck}  "
+              f"t=(c {terms['t_compute_s']*1e3:.2f} | m {terms['t_memory_s']*1e3:.2f} | "
+              f"x {terms['t_collective_s']*1e3:.2f}) ms  "
+              f"useful {summary['useful_flops_ratio']:.2f}")
+        sys.stdout.flush()
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep layer scans rolled (faster compile, FLOPs undercounted)")
+    ap.add_argument("--roofline", action="store_true",
+                    help="depth-extrapolated roofline pass (reduced-depth unrolled)")
+    ap.add_argument("--fl-bits", type=int, default=8,
+                    help="paper's uplink quantization bit-width in train_step (32=off)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="microbatch count for train shapes (memory lever)")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        pairs.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape in pairs:
+        from repro.configs import canonical
+
+        if (canonical(arch), shape) in SKIPS:
+            print(f"[{arch} x {shape}] SKIP: {SKIPS[(canonical(arch), shape)]}")
+            res = DryrunResult(arch, shape, "-", "SKIP",
+                               error=SKIPS[(canonical(arch), shape)])
+            results.append(res)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(dataclasses.asdict(res)) + "\n")
+            continue
+        if args.roofline:
+            res = roofline_extrapolated(arch, shape, fl_bits=args.fl_bits,
+                                        grad_accum=args.grad_accum)
+        else:
+            res = run_one(arch, shape, multi_pod=args.multi_pod,
+                          unroll=not args.no_unroll, fl_bits=args.fl_bits,
+                          grad_accum=args.grad_accum)
+        if res.status == "FAIL":
+            print(f"[{arch} x {shape}] FAIL: {res.error}")
+        results.append(res)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(dataclasses.asdict(res)) + "\n")
+
+    n_ok = sum(r.status == "OK" for r in results)
+    n_fail = sum(r.status == "FAIL" for r in results)
+    n_skip = sum(r.status == "SKIP" for r in results)
+    print(f"\n== dry-run: {n_ok} OK, {n_fail} FAIL, {n_skip} SKIP ==")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

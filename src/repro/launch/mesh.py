@@ -1,0 +1,21 @@
+"""Production mesh construction (MULTI-POD DRY-RUN step 1).
+
+A function, not a module constant: importing this module never touches jax
+device state. Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the leading "pod" axis
+carries the cross-pod data-parallel (gradient all-reduce) traffic.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(devices=None):
+    """1-device mesh with the same axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=devices)

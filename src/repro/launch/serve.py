@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill a prompt batch, then greedy-decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+
+    max_len = args.prompt_len + args.gen + 1
+    prompts = jax.random.randint(
+        jax.random.fold_in(key, 1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size)
+
+    extras = {}
+    if cfg.family == "vlm":
+        extras["img_feats"] = jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (args.batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+
+        enc_feats = jax.random.normal(
+            jax.random.fold_in(key, 3),
+            (args.batch, max(args.prompt_len, 8), cfg.d_model), jnp.bfloat16)
+        extras["enc_out"] = encdec.encode(params, enc_feats, cfg)
+
+    # prefill
+    caches = model.init_cache(args.batch, max_len)
+    kw = dict(extras)
+    if cfg.family == "encdec":
+        kw = {"enc_out": extras["enc_out"]}
+    t0 = time.time()
+    out = model.module.forward(params, prompts, cfg, caches=caches,
+                               remat=False, **kw)
+    logits, caches = out[0], out[1]
+    tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    serve_step = jax.jit(steps_lib.make_serve_step(model))
+    generated = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        batch = {"tokens": tok, **extras}
+        tok, caches = serve_step(params, caches, batch)
+        generated.append(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(generated, axis=1)
+    print(f"arch={cfg.name} prefill {args.prompt_len} tok in {t_prefill:.2f}s; "
+          f"decoded {args.gen} tok in {t_decode:.2f}s "
+          f"({args.gen * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
+    print("sample generation (ids):", np.asarray(gen[0])[:16].tolist())
+    assert gen.shape == (args.batch, args.gen)
+    assert bool(jnp.all((gen >= 0) & (gen < cfg.vocab_size)))
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Step functions (train / prefill / serve) and their input specs.
+
+The FL-NOMA integration at LLM scale (DESIGN.md §2): ``make_train_step``
+inserts the paper's DoReFa quantize->dequantize on the gradient pytree
+between backward and optimizer — the "uplink" of Algorithm 1 — with the
+bit-width ``fl_bits`` supplied per round by the NOMA rate model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.core import compression
+from repro.models import Model
+
+
+# --------------------------------------------------------------------------
+# Abstract inputs (dry-run stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+def enc_frames(shape: ShapeConfig) -> int:
+    """Stub audio frontend length: 4 tokens per frame."""
+    return max(shape.seq_len // 4, 64)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    b = shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "vlm":
+            batch["img_feats"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "encdec":
+            batch["enc_feats"] = jax.ShapeDtypeStruct(
+                (b, enc_frames(shape), cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["img_feats"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "encdec":
+            batch["enc_feats"] = jax.ShapeDtypeStruct(
+                (b, enc_frames(shape), cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    batch = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.family == "vlm":
+        batch["img_feats"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        batch["enc_out"] = jax.ShapeDtypeStruct(
+            (b, enc_frames(shape), cfg.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+def abstract_cache(model: Model, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+
+
+# --------------------------------------------------------------------------
+# Steps
+# --------------------------------------------------------------------------
+
+def make_train_step(model: Model, optimizer, *, fl_bits: Optional[int] = None,
+                    unroll: bool = False, kv_chunk: int = 1024,
+                    grad_accum: int = 1, remat: bool = True):
+    """(params, opt_state, batch) -> (params, opt_state, loss).
+
+    grad_accum > 1 splits the global batch into interleaved microbatches
+    (each microbatch stays sharded across the full data axis) and scans
+    them, accumulating fp32 gradients. This bounds live remat activations to
+    one microbatch — the standard fix for deep-model train memory
+    (EXPERIMENTS.md §Perf). The paper's quantization applies to the
+    *accumulated* round gradient, matching Algorithm 1 (one uplink/round).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss)(
+            params, batch, unroll=unroll, kv_chunk=kv_chunk, remat=remat
+        )
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            def split(x):
+                b = x.shape[0]
+                mb = b // grad_accum
+                # interleave so each microbatch spans every data shard
+                return x.reshape(mb, grad_accum, *x.shape[1:]).swapaxes(0, 1)
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                loss, g = grads_of(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+        else:
+            loss, grads = grads_of(params, batch)
+        if fl_bits is not None and fl_bits < 32:
+            grads = compression.encode_decode_tree(grads, fl_bits)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return train_step
+
+
+def make_prefill_step(model: Model, shape: ShapeConfig, *, unroll: bool = False,
+                      kv_chunk: int = 1024):
+    """(params, batch) -> (last_logits, caches). Caches built inside."""
+
+    def prefill_step(params, batch):
+        caches = model.init_cache(shape.global_batch, shape.seq_len)
+        kw = {}
+        if model.cfg.family == "vlm":
+            kw["img_feats"] = batch["img_feats"]
+        if model.cfg.family == "encdec":
+            kw["enc_feats"] = batch["enc_feats"]
+        out = model.module.forward(
+            params, batch["tokens"], model.cfg, caches=caches,
+            remat=False, unroll=unroll, kv_chunk=kv_chunk, **kw
+        )
+        logits, caches = out[0], out[1]
+        return logits[:, -1:], caches
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, *, unroll: bool = False, kv_chunk: int = 4096):
+    """(params, caches, batch) -> (next_token, caches). Greedy decode."""
+
+    def serve_step(params, caches, batch):
+        logits, new_caches = model.decode_step(
+            params, caches, batch["tokens"], batch=batch,
+            kv_chunk=kv_chunk, unroll=unroll,
+        )
+        nxt = jnp.argmax(logits[:, -1, : model.cfg.vocab_size], axis=-1)
+        return nxt.astype(jnp.int32)[:, None], new_caches
+
+    return serve_step

@@ -1,0 +1,125 @@
+"""Encoder-decoder transformer for the audio arch (seamless-m4t backbone)
+[arXiv:2308.11596].
+
+Per the carve-out the codec/mel frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model) from ``input_specs()``.
+Encoder: bidirectional self-attention stack. Decoder: causal self-attention
++ cross-attention to the encoder output + SwiGLU MLP. Decode caches the
+decoder self-attention KV and the (fixed) encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.params import ParamSpec, stacked
+
+
+def dec_block_schema(cfg, *, shards: int = 16):
+    return {
+        "ln1": L.rmsnorm_schema(cfg.d_model),
+        "self_attn": L.attention_schema(cfg, shards=shards),
+        "ln_x": L.rmsnorm_schema(cfg.d_model),
+        "cross_attn": L.attention_schema(cfg, shards=shards),
+        "ln2": L.rmsnorm_schema(cfg.d_model),
+        "mlp": L.mlp_schema(cfg.d_model, cfg.d_ff),
+    }
+
+
+def schema(cfg, *, shards: int = 16):
+    return {
+        "enc_in": ParamSpec((cfg.d_model, cfg.d_model), ("embed", None)),
+        "encoder": stacked(T.block_schema(cfg, shards=shards), cfg.encoder_layers),
+        "enc_ln": L.rmsnorm_schema(cfg.d_model),
+        "embed": L.embedding_schema(cfg.padded_vocab, cfg.d_model, tie=cfg.tie_embeddings),
+        "decoder": stacked(dec_block_schema(cfg, shards=shards), cfg.num_layers),
+        "ln_f": L.rmsnorm_schema(cfg.d_model),
+    }
+
+
+def encode(params, enc_feats, cfg, *, kv_chunk: int = 1024, remat: bool = True,
+           unroll: bool = False):
+    """enc_feats: (B, S_enc, D) stub frame embeddings -> encoder output."""
+    x = jnp.einsum(
+        "bsd,de->bse", enc_feats.astype(L.COMPUTE_DTYPE),
+        params["enc_in"].astype(L.COMPUTE_DTYPE),
+    )
+    mspec = L.AttnMaskSpec(causal=False)
+    positions = jnp.arange(enc_feats.shape[1])
+
+    def body(x, p_layer):
+        y, _ = T.transformer_block(
+            p_layer, x, cfg, mspec=mspec, positions=positions,
+            cache=None, kv_chunk=kv_chunk,
+        )
+        return y, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["encoder"], unroll=unroll)
+    return L.rmsnorm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def decoder_block(p, x, enc_out, cfg, *, positions, cache, kv_chunk):
+    h, new_cache = L.attention_block(
+        p["self_attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+        mask_spec=L.AttnMaskSpec(causal=True), positions=positions,
+        cache=cache, kv_chunk=kv_chunk,
+    )
+    x = x + h
+    h, _ = L.attention_block(
+        p["cross_attn"], L.rmsnorm(p["ln_x"], x, cfg.norm_eps), cfg,
+        mask_spec=L.AttnMaskSpec(causal=False), kv_source=enc_out,
+        kv_chunk=kv_chunk,
+    )
+    x = x + h
+    x = x + L.mlp_block(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+def forward(params, tokens, cfg, *, enc_feats=None, enc_out=None, caches=None,
+            kv_chunk: int = 1024, remat: bool = True, unroll: bool = False, **_):
+    if enc_out is None:
+        enc_out = encode(params, enc_feats, cfg, kv_chunk=kv_chunk, remat=remat,
+                         unroll=unroll)
+    x = L.embed(params["embed"], tokens)
+    positions = None
+    if caches is not None:
+        positions = caches["len"][0] + jnp.arange(tokens.shape[1])[None, :]
+
+    def body(x, xs):
+        p_layer, cache = xs
+        return decoder_block(
+            p_layer, x, enc_out, cfg, positions=positions,
+            cache=cache, kv_chunk=kv_chunk,
+        )
+
+    fn = jax.checkpoint(body) if (remat and caches is None) else body
+    x, new_caches = jax.lax.scan(fn, x, (params["decoder"], caches), unroll=unroll)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, tie=cfg.tie_embeddings)
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg, **kw):
+    logits, _ = forward(params, batch["tokens"], cfg,
+                        enc_feats=batch["enc_feats"], **kw)
+    return L.cross_entropy(logits, batch["labels"], vocab_size=cfg.vocab_size)
+
+
+def init_cache(cfg, batch: int, max_len: int, *, shards: int = 16):
+    one = L.init_attn_cache(cfg, batch, max_len, shards=shards)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers, *x.shape)), one
+    )
+
+
+def decode_step(params, caches, tokens, cfg, *, enc_out, kv_chunk: int = 4096,
+                unroll: bool = False):
+    """enc_out: precomputed encoder output (run `encode` once at prefill)."""
+    logits, new_caches = forward(
+        params, tokens, cfg, enc_out=enc_out, caches=caches,
+        kv_chunk=kv_chunk, remat=False, unroll=unroll,
+    )
+    return logits, new_caches

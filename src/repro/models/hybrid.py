@@ -1,0 +1,140 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every ``hybrid_attn_every`` mamba layers [arXiv:2411.15242].
+
+Structure: ``n_sites`` super-blocks of (every x mamba2) followed by the
+shared attention+MLP block (one weight set reused at every site — the
+Zamba2 signature), plus a tail of remaining mamba layers. The outer scan
+runs over sites with the shared block's weights closed over (not scanned),
+so weight reuse is structural, not copied.
+
+Simplification vs the released model (DESIGN.md §6): Zamba2 concatenates the
+original embedding into the shared block input and uses per-site LoRA deltas;
+we apply the shared block on the residual stream directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import transformer as T
+from repro.models.params import stacked
+
+
+def sites_of(cfg):
+    n_sites = cfg.num_layers // cfg.hybrid_attn_every
+    tail = cfg.num_layers % cfg.hybrid_attn_every
+    assert n_sites >= 1, "hybrid needs at least one shared-attn site"
+    return n_sites, tail
+
+
+def schema(cfg, *, shards: int = 16):
+    n_sites, tail = sites_of(cfg)
+    sch = {
+        "embed": L.embedding_schema(cfg.padded_vocab, cfg.d_model, tie=cfg.tie_embeddings),
+        "sites": stacked(stacked(M.block_schema(cfg), cfg.hybrid_attn_every), n_sites),
+        "shared_attn": T.block_schema(cfg, shards=shards),
+        "ln_f": L.rmsnorm_schema(cfg.d_model),
+    }
+    if tail:
+        sch["tail"] = stacked(M.block_schema(cfg), tail)
+    return sch
+
+
+def _mamba_stack(params_stacked, x, cfg, caches, *, remat, decode, unroll=False):
+    def body(x, xs):
+        p_layer, st = xs
+        if decode:
+            y, new_st = M.mamba_decode_step(p_layer, x, cfg, st)
+        else:
+            y, new_st = M.mamba_block(p_layer, x, cfg, state=st)
+        return x + y, new_st
+
+    fn = jax.checkpoint(body) if (remat and caches is None) else body
+    return jax.lax.scan(fn, x, (params_stacked, caches), unroll=unroll)
+
+
+def forward(params, tokens, cfg, *, caches=None, kv_chunk: int = 1024,
+            remat: bool = True, unroll: bool = False, **_):
+    n_sites, tail = sites_of(cfg)
+    x = L.embed(params["embed"], tokens)
+    mspec = L.AttnMaskSpec(causal=True)
+    decode = caches is not None and tokens.shape[1] == 1
+
+    positions = None
+    if caches is not None:
+        positions = caches["attn"]["len"][0] + jnp.arange(tokens.shape[1])[None, :]
+
+    shared = params["shared_attn"]
+
+    def site_body(x, xs):
+        p_site, site_caches = xs
+        mamba_caches = None if caches is None else site_caches["mamba"]
+        attn_cache = None if caches is None else site_caches["attn"]
+        x, new_mamba = _mamba_stack(
+            p_site, x, cfg, mamba_caches, remat=remat, decode=decode,
+            unroll=unroll,
+        )
+        x, new_attn = T.transformer_block(
+            shared, x, cfg, mspec=mspec, positions=positions,
+            cache=attn_cache, kv_chunk=kv_chunk,
+        )
+        return x, {"mamba": new_mamba, "attn": new_attn}
+
+    site_xs = {
+        "mamba": None if caches is None else caches["mamba"],
+        "attn": None if caches is None else caches["attn"],
+    }
+    x, new_site_caches = jax.lax.scan(site_body, x, (params["sites"], site_xs),
+                                      unroll=unroll)
+
+    new_tail = None
+    if tail:
+        tail_caches = None if caches is None else caches["tail"]
+        x, new_tail = _mamba_stack(
+            params["tail"], x, cfg, tail_caches, remat=remat, decode=decode,
+            unroll=unroll,
+        )
+
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, tie=cfg.tie_embeddings)
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "mamba": new_site_caches["mamba"],
+            "attn": new_site_caches["attn"],
+        }
+        if tail:
+            new_caches["tail"] = new_tail
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg, **kw):
+    logits, _ = forward(params, batch["tokens"], cfg, **kw)
+    return L.cross_entropy(logits, batch["labels"], vocab_size=cfg.vocab_size)
+
+
+def init_cache(cfg, batch: int, max_len: int, *, shards: int = 16):
+    n_sites, tail = sites_of(cfg)
+    mamba_one = M.init_state(cfg, batch)
+    attn_one = L.init_attn_cache(cfg, batch, max_len, shards=shards)
+
+    def rep(tree, n):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), tree
+        )
+
+    caches = {
+        "mamba": rep(rep(mamba_one, cfg.hybrid_attn_every), n_sites),
+        "attn": rep(attn_one, n_sites),
+    }
+    if tail:
+        caches["tail"] = rep(mamba_one, tail)
+    return caches
+
+
+def decode_step(params, caches, tokens, cfg, *, kv_chunk: int = 4096,
+                unroll: bool = False):
+    return forward(params, tokens, cfg, caches=caches, kv_chunk=kv_chunk,
+                   remat=False, unroll=unroll)

@@ -1,0 +1,41 @@
+"""LeNet-300-100: the paper's own model (§IV).
+
+Fully-connected 784 -> 300 -> 100 -> 10 with ReLU; 266,610 parameters
+(784*300+300 + 300*100+100 + 100*10+10), matching the paper's count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+def schema(cfg=None, *, shards: int = 1):
+    return {
+        "fc1": {"w": ParamSpec((784, 300), (None, None)),
+                "b": ParamSpec((300,), (None,), init="zeros")},
+        "fc2": {"w": ParamSpec((300, 100), (None, None)),
+                "b": ParamSpec((100,), (None,), init="zeros")},
+        "fc3": {"w": ParamSpec((100, 10), (None, None)),
+                "b": ParamSpec((10,), (None,), init="zeros")},
+    }
+
+
+def forward(params, x):
+    """x: (B, 784) float32 -> logits (B, 10)."""
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+    return h @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def loss_fn(params, batch):
+    logits = forward(params, batch["x"])
+    labels = batch["y"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(params, x, y):
+    return jnp.mean((jnp.argmax(forward(params, x), axis=-1) == y).astype(jnp.float32))

@@ -1,0 +1,317 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm (the paper's "ssd_minimal_discrete"
+reference, restructured for TPU): within-chunk quadratic attention-like
+einsums on the MXU, across-chunk linear state recurrence. Decode is the O(1)
+per-token recurrence  h <- h*exp(dt*A) + dt*B x ;  y = C.h + D*x.
+
+Layout notes: d_inner = expand * d_model is split into H = d_inner/P heads
+(P = ssm_head_dim); B and C are shared across heads per group (G groups).
+A depthwise causal conv (width W) runs over concat(x, B, C) as in Mamba2.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.params import ParamSpec, stacked
+
+SSD_CHUNK = 128
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+
+
+def block_schema(cfg):
+    d = cfg.d_model
+    d_in, h, p_, g, n = dims(cfg)
+    conv_dim = d_in + 2 * g * n
+    return {
+        "ln": L.rmsnorm_schema(d),
+        "in_x": ParamSpec((d, d_in), ("embed", "mlp")),
+        "in_z": ParamSpec((d, d_in), ("embed", "mlp")),
+        "in_b": ParamSpec((d, g * n), ("embed", None)),
+        "in_c": ParamSpec((d, g * n), ("embed", None)),
+        "in_dt": ParamSpec((d, h), ("embed", "heads")),
+        "dt_bias": ParamSpec((h,), ("heads",), init="zeros"),
+        "a_log": ParamSpec((h,), ("heads",), init="ssm_a"),
+        "d_skip": ParamSpec((h,), ("heads",), init="ones"),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, conv_dim), (None, "mlp")),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), init="zeros"),
+        "norm_gate": ParamSpec((d_in,), ("mlp",), init="ones"),
+        "out": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def schema(cfg, *, shards: int = 16):
+    return {
+        "embed": L.embedding_schema(cfg.padded_vocab, cfg.d_model, tie=cfg.tie_embeddings),
+        "layers": stacked(block_schema(cfg), cfg.num_layers),
+        "ln_f": L.rmsnorm_schema(cfg.d_model),
+    }
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+
+def _segsum(x):
+    """segsum(x)[..., i, j] = sum_{j < k <= i} x_k ; -inf above diagonal."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, *, chunk: int = SSD_CHUNK, init_state=None,
+                einsum_dtype=jnp.float32):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   dt: (B, S, H)   a_log: (H,)
+    b, c: (B, S, G, N) ;  heads map to group h % G... (H multiple of G)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    einsum_dtype=bfloat16 keeps the O(S*Q) / O(S*N*P) einsum operands in
+    bf16 (the decay/cumsum math stays fp32) — §Perf pair A iteration 6.
+    """
+    bsz, s, h, p_ = x.shape
+    g, n = b.shape[2], b.shape[3]
+    nc = s // chunk
+    ed = einsum_dtype
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # (H,)
+    da = dt.astype(jnp.float32) * a[None, None, :]             # (B,S,H)
+    xd = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # chunk reshapes
+    dac = da.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)   # (B,H,C,L)
+    xc = xd.astype(ed).reshape(bsz, nc, chunk, h, p_)
+    rep = h // g
+    bc_ = b.astype(ed).reshape(bsz, nc, chunk, g, n)
+    cc_ = c.astype(ed).reshape(bsz, nc, chunk, g, n)
+    bh = jnp.repeat(bc_, rep, axis=3)                          # (B,C,L,H,N)
+    ch = jnp.repeat(cc_, rep, axis=3)
+
+    da_cs = jnp.cumsum(dac, axis=-1)                           # (B,H,C,L)
+    lmat = jnp.exp(_segsum(dac)).astype(ed)                    # (B,H,C,L,L)
+
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", ch, bh, lmat, xc,
+                        preferred_element_type=jnp.float32)
+
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs).astype(ed)  # (B,H,C,L)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", bh, decay_states, xc,
+                        preferred_element_type=jnp.float32)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p_, n), jnp.float32)
+
+    # across-chunk recurrence (sequential scan; nc is small)
+    chunk_decay = jnp.exp(da_cs[..., -1])                      # (B,H,C)
+
+    def scan_fn(carry, xs):
+        st, dec = xs                                           # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    (final, prevs) = jax.lax.scan(
+        scan_fn,
+        init_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prevs.transpose(1, 0, 2, 3, 4)               # (B,C,H,P,N)
+
+    state_decay_out = jnp.exp(da_cs).astype(ed)                # (B,H,C,L)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", ch,
+                       prev_states.astype(ed), state_decay_out,
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p_)
+    return y, final
+
+
+def ssd_step(state, x_t, dt_t, a_log, b_t, c_t):
+    """O(1) decode recurrence. state (B,H,P,N); x_t (B,H,P); dt_t (B,H);
+    b_t, c_t (B,G,N)."""
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dec = jnp.exp(dt_t.astype(jnp.float32) * a[None, :])       # (B,H)
+    bh = jnp.repeat(b_t.astype(jnp.float32), rep, axis=1)      # (B,H,N)
+    ch = jnp.repeat(c_t.astype(jnp.float32), rep, axis=1)
+    xd = x_t.astype(jnp.float32) * dt_t.astype(jnp.float32)[..., None]
+    new = state * dec[..., None, None] + xd[..., None] * bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", new, ch)
+    return y, new
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block (conv + gating + SSD)
+# --------------------------------------------------------------------------
+
+def _causal_conv(u, w, bias):
+    """Depthwise causal conv. u: (B,S,C), w: (W,C)."""
+    width = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(width):
+        out = out + up[:, i : i + u.shape[1], :].astype(jnp.float32) * w[i][None, None, :].astype(jnp.float32)
+    return out + bias.astype(jnp.float32)
+
+
+def _conv_step(conv_state, u_t, w, bias):
+    """conv_state: (B, W-1, C) past inputs; u_t: (B, C)."""
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state, u_t[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    return out + bias.astype(jnp.float32), window[:, 1:, :]
+
+
+def _gated_norm(y, z, scale, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+
+
+def mamba_block(p, x, cfg, *, state=None):
+    """Full-sequence mamba2 block. x: (B,S,D).
+
+    state: None (training/prefill from scratch) or
+    {"ssm": (B,H,P,N), "conv": (B,W-1,conv_dim)} for chunk-wise prefill.
+    Returns (out, new_state).
+    """
+    d_in, h, p_, g, n = dims(cfg)
+    bsz, s, _ = x.shape
+    xin = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    xc = xin.astype(L.COMPUTE_DTYPE)
+
+    xs = jnp.einsum("bsd,di->bsi", xc, p["in_x"].astype(L.COMPUTE_DTYPE))
+    z = jnp.einsum("bsd,di->bsi", xc, p["in_z"].astype(L.COMPUTE_DTYPE))
+    bproj = jnp.einsum("bsd,di->bsi", xc, p["in_b"].astype(L.COMPUTE_DTYPE))
+    cproj = jnp.einsum("bsd,di->bsi", xc, p["in_c"].astype(L.COMPUTE_DTYPE))
+    dt_raw = jnp.einsum("bsd,dh->bsh", xc, p["in_dt"].astype(L.COMPUTE_DTYPE))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    conv_in = jnp.concatenate([xs, bproj, cproj], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs = conv_out[..., :d_in].reshape(bsz, s, h, p_)
+    bmat = conv_out[..., d_in : d_in + g * n].reshape(bsz, s, g, n)
+    cmat = conv_out[..., d_in + g * n :].reshape(bsz, s, g, n)
+
+    chunk = cfg.ssm_chunk
+    pad = (-s) % chunk
+    if pad:
+        xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_p = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_p = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        xs_p, dt_p, b_p, c_p = xs, dt, bmat, cmat
+    init_ssm = None if state is None else state["ssm"]
+    y, final = ssd_chunked(
+        xs_p, dt_p, p["a_log"], b_p, c_p, chunk=chunk, init_state=init_ssm,
+        einsum_dtype=L.COMPUTE_DTYPE if cfg.ssm_bf16 else jnp.float32)
+    y = y[:, :s]
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in)
+
+    y = _gated_norm(y, z, p["norm_gate"], cfg.norm_eps).astype(L.COMPUTE_DTYPE)
+    out = jnp.einsum("bsi,id->bsd", y, p["out"].astype(L.COMPUTE_DTYPE))
+    new_state = {"ssm": final, "conv": None}
+    if state is not None:
+        # keep last W-1 conv inputs for continued decode
+        width = cfg.ssm_conv_width
+        tail = jnp.concatenate([state["conv"], conv_in.astype(jnp.float32)], axis=1)[:, -(width - 1):, :]
+        new_state = {"ssm": final, "conv": tail}
+    return out.astype(x.dtype), new_state
+
+
+def mamba_decode_step(p, x, cfg, state):
+    """One-token step. x: (B,1,D). state: {"ssm","conv"}."""
+    d_in, h, p_, g, n = dims(cfg)
+    bsz = x.shape[0]
+    xin = L.rmsnorm(p["ln"], x, cfg.norm_eps)[:, 0]
+    xc = xin.astype(L.COMPUTE_DTYPE)
+    xs = xc @ p["in_x"].astype(L.COMPUTE_DTYPE)
+    z = xc @ p["in_z"].astype(L.COMPUTE_DTYPE)
+    bproj = xc @ p["in_b"].astype(L.COMPUTE_DTYPE)
+    cproj = xc @ p["in_c"].astype(L.COMPUTE_DTYPE)
+    dt_raw = xc @ p["in_dt"].astype(L.COMPUTE_DTYPE)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    conv_in = jnp.concatenate([xs, bproj, cproj], axis=-1)     # (B, conv_dim)
+    conv_out, new_conv = _conv_step(state["conv"], conv_in, p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    x_t = conv_out[:, :d_in].reshape(bsz, h, p_)
+    b_t = conv_out[:, d_in : d_in + g * n].reshape(bsz, g, n)
+    c_t = conv_out[:, d_in + g * n :].reshape(bsz, g, n)
+
+    y, new_ssm = ssd_step(state["ssm"], x_t, dt, p["a_log"], b_t, c_t)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * x_t.astype(jnp.float32)
+    y = y.reshape(bsz, d_in)
+    y = _gated_norm(y, z, p["norm_gate"], cfg.norm_eps).astype(L.COMPUTE_DTYPE)
+    out = (y @ p["out"].astype(L.COMPUTE_DTYPE)).astype(x.dtype)
+    return out[:, None, :], {"ssm": new_ssm, "conv": new_conv}
+
+
+def init_state(cfg, batch: int):
+    d_in, h, p_, g, n = dims(cfg)
+    conv_dim = d_in + 2 * g * n
+    return {
+        "ssm": jnp.zeros((batch, h, p_, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# Full model
+# --------------------------------------------------------------------------
+
+def forward(params, tokens, cfg, *, caches=None, remat: bool = True,
+            unroll: bool = False, **_):
+    x = L.embed(params["embed"], tokens)
+
+    if caches is not None and tokens.shape[1] == 1:
+        def body(x, xs):
+            p_layer, st = xs
+            y, new_st = mamba_decode_step(p_layer, x, cfg, st)
+            return x + y, new_st
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches),
+                                     unroll=unroll)
+    else:
+        def body(x, xs):
+            p_layer, st = xs
+            y, new_st = mamba_block(p_layer, x, cfg, state=st)
+            return x + y, new_st
+
+        fn = jax.checkpoint(body) if (remat and caches is None) else body
+        x, new_caches = jax.lax.scan(fn, x, (params["layers"], caches),
+                                     unroll=unroll)
+
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, tie=cfg.tie_embeddings)
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg, **kw):
+    logits, _ = forward(params, batch["tokens"], cfg, **kw)
+    return L.cross_entropy(logits, batch["labels"], vocab_size=cfg.vocab_size)
+
+
+def init_cache(cfg, batch: int, max_len: int, *, shards: int = 16):
+    one = init_state(cfg, batch)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers, *x.shape)), one
+    )
+
+
+def decode_step(params, caches, tokens, cfg, *, unroll: bool = False, **_):
+    return forward(params, tokens, cfg, caches=caches, remat=False, unroll=unroll)

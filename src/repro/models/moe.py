@@ -1,0 +1,173 @@
+"""Mixture-of-experts decoder (mixtral, llama4-scout).
+
+GShard-style dispatch: tokens are grouped (group size ``MOE_GROUP``), the
+router picks top-k experts per token, each expert processes a fixed-capacity
+buffer (capacity_factor over the uniform share), overflow tokens drop to the
+residual path. Dispatch/combine are one-hot einsums — the TPU-native
+formulation (dense MXU work + all-to-all under pjit) rather than a
+CUDA-style scatter/gather (DESIGN.md §3).
+
+llama4-scout: top-1 routing + always-on shared expert, block-local attention
+for long context. mixtral: top-2 routing + sliding-window attention.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.params import ParamSpec, stacked
+
+MOE_GROUP = 2048  # tokens per dispatch group (bounds one-hot memory)
+
+
+def moe_schema(cfg):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    sch = {
+        "router": ParamSpec((d, e), ("embed", "expert_in")),
+        "wi_gate": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "wi_up": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "wo": ParamSpec((e, f, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.moe_shared_expert:
+        sch["shared"] = L.mlp_schema(d, f)
+    return sch
+
+
+def block_schema(cfg, *, shards: int = 16):
+    return {
+        "ln1": L.rmsnorm_schema(cfg.d_model),
+        "attn": L.attention_schema(cfg, shards=shards),
+        "ln2": L.rmsnorm_schema(cfg.d_model),
+        "moe": moe_schema(cfg),
+    }
+
+
+def schema(cfg, *, shards: int = 16):
+    return {
+        "embed": L.embedding_schema(cfg.padded_vocab, cfg.d_model, tie=cfg.tie_embeddings),
+        "layers": stacked(block_schema(cfg, shards=shards), cfg.num_layers),
+        "ln_f": L.rmsnorm_schema(cfg.d_model),
+    }
+
+
+def moe_block(p, x, cfg):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e = cfg.num_experts
+    k = cfg.experts_per_token
+    group = min(MOE_GROUP, s)
+    g = (b * s) // group
+    xg = x.reshape(g, group, d)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                    # (g, t, e)
+
+    cap = int(group * k * cfg.capacity_factor / e) + 1
+
+    dispatch = jnp.zeros((g, group, e, cap), L.COMPUTE_DTYPE)
+    combine = jnp.zeros((g, group, e, cap), jnp.float32)
+    masked = probs
+    expert_mass = jnp.zeros((g, e), jnp.float32)
+    # Buffer slots claimed by earlier choice ranks: rank-r positions must be
+    # OFFSET by the counts of ranks < r, or a token's 2nd choice lands in
+    # the same (expert, slot) as another token's 1st choice — the inputs
+    # then SUM in the buffer and both tokens read a corrupted expert output
+    # (caught by test_moe_decode_exact_without_drops: outputs depended on
+    # sequence length).
+    taken = jnp.zeros((g, 1, e), jnp.float32)
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)                      # (g, t)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)     # (g, t, e)
+        w = jnp.sum(masked * onehot, axis=-1)                  # (g, t)
+        # position of each token within its expert's buffer
+        pos = (jnp.cumsum(onehot, axis=1) + taken) * onehot - 1.0  # (g, t, e)
+        keep = (pos >= 0) & (pos < cap)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        slot = pos_oh * keep[..., None].astype(jnp.float32)    # (g, t, e, cap)
+        dispatch = dispatch + slot.astype(L.COMPUTE_DTYPE)
+        combine = combine + slot * w[:, :, None, None]
+        expert_mass = expert_mass + jnp.mean(onehot, axis=1)
+        taken = taken + jnp.sum(onehot, axis=1, keepdims=True)
+        masked = masked * (1.0 - onehot)
+
+    # Load-balance auxiliary loss (Switch-style): E * <fraction> . <prob mass>
+    frac = expert_mass / k
+    mean_prob = jnp.mean(probs, axis=1)
+    aux = e * jnp.mean(jnp.sum(frac * mean_prob, axis=-1))
+
+    xin = jnp.einsum("gtd,gtec->gecd", xg.astype(L.COMPUTE_DTYPE), dispatch)
+    gate = jnp.einsum("gecd,edf->gecf", xin, p["wi_gate"].astype(L.COMPUTE_DTYPE))
+    up = jnp.einsum("gecd,edf->gecf", xin, p["wi_up"].astype(L.COMPUTE_DTYPE))
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(L.COMPUTE_DTYPE) * up
+    eout = jnp.einsum("gecf,efd->gecd", act, p["wo"].astype(L.COMPUTE_DTYPE))
+    y = jnp.einsum(
+        "gecd,gtec->gtd", eout, combine.astype(L.COMPUTE_DTYPE)
+    )
+
+    out = y.reshape(b, s, d).astype(x.dtype)
+    if cfg.moe_shared_expert:
+        out = out + L.mlp_block(p["shared"], x)
+    return out, aux
+
+
+def moe_transformer_block(p, x, cfg, *, mspec, positions, cache, kv_chunk):
+    h, new_cache = L.attention_block(
+        p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+        mask_spec=mspec, positions=positions, cache=cache, kv_chunk=kv_chunk,
+    )
+    x = x + h
+    y, aux = moe_block(p["moe"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x + y, new_cache, aux
+
+
+def forward(
+    params, tokens, cfg, *,
+    caches=None, positions=None, kv_chunk: int = 1024, remat: bool = True,
+    unroll: bool = False,
+):
+    x = L.embed(params["embed"], tokens)
+    mspec = T.mask_spec(cfg)
+    if positions is None and caches is not None:
+        positions = caches["len"][0] + jnp.arange(tokens.shape[1])[None, :]
+
+    def body(carry, xs):
+        x, aux_sum = carry
+        p_layer, cache = xs
+        y, new_cache, aux = moe_transformer_block(
+            p_layer, x, cfg, mspec=mspec, positions=positions,
+            cache=cache, kv_chunk=kv_chunk,
+        )
+        return (y, aux_sum + aux), new_cache
+
+    fn = jax.checkpoint(body) if (remat and caches is None) else body
+    (x, aux), new_caches = jax.lax.scan(
+        fn, (x, jnp.zeros((), jnp.float32)), (params["layers"], caches),
+        unroll=unroll,
+    )
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, tie=cfg.tie_embeddings)
+    return logits, new_caches, aux / cfg.num_layers
+
+
+def loss_fn(params, batch, cfg, *, aux_coef: float = 0.01, **kw):
+    logits, _, aux = forward(params, batch["tokens"], cfg, **kw)
+    ce = L.cross_entropy(logits, batch["labels"], vocab_size=cfg.vocab_size)
+    return ce + aux_coef * aux
+
+
+init_cache = T.init_cache
+
+
+def decode_step(params, caches, tokens, cfg, *, kv_chunk: int = 4096,
+                unroll: bool = False):
+    logits, new_caches, _ = forward(
+        params, tokens, cfg, caches=caches, kv_chunk=kv_chunk, remat=False,
+        unroll=unroll,
+    )
+    return logits, new_caches

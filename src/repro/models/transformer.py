@@ -1,0 +1,104 @@
+"""Dense decoder-only transformer (llama/qwen/granite/mistral families).
+
+Supports GQA/MQA (with KV-head replication for sharding), qk-norm (qwen3),
+QKV bias (qwen2), sliding-window attention (mixtral), block-local attention
+(llama4 long-context), RoPE, SwiGLU MLP. Layers run under lax.scan with
+stacked params (O(1) HLO in depth).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.params import ParamSpec, stacked
+
+
+def block_schema(cfg, *, shards: int = 16):
+    return {
+        "ln1": L.rmsnorm_schema(cfg.d_model),
+        "attn": L.attention_schema(cfg, shards=shards),
+        "ln2": L.rmsnorm_schema(cfg.d_model),
+        "mlp": L.mlp_schema(cfg.d_model, cfg.d_ff),
+    }
+
+
+def schema(cfg, *, shards: int = 16):
+    return {
+        "embed": L.embedding_schema(cfg.padded_vocab, cfg.d_model, tie=cfg.tie_embeddings),
+        "layers": stacked(block_schema(cfg, shards=shards), cfg.num_layers),
+        "ln_f": L.rmsnorm_schema(cfg.d_model),
+    }
+
+
+def mask_spec(cfg) -> L.AttnMaskSpec:
+    return L.AttnMaskSpec(
+        causal=True, window=cfg.sliding_window, block_local=cfg.attention_chunk
+    )
+
+
+def transformer_block(p, x, cfg, *, mspec, positions, cache, kv_chunk):
+    h, new_cache = L.attention_block(
+        p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+        mask_spec=mspec, positions=positions, cache=cache, kv_chunk=kv_chunk,
+    )
+    x = L.constrain(x + h, "residual")
+    x = x + L.mlp_block(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return L.constrain(x, "residual"), new_cache
+
+
+def forward(
+    params,
+    tokens: jax.Array,                  # (B, S)
+    cfg,
+    *,
+    caches: Optional[dict] = None,      # stacked per-layer cache pytree
+    positions: Optional[jax.Array] = None,
+    kv_chunk: int = 1024,
+    remat: bool = True,
+    unroll: bool = False,
+):
+    """Returns (logits (B,S,V), new_caches)."""
+    x = L.embed(params["embed"], tokens)
+    mspec = mask_spec(cfg)
+    if positions is None and caches is not None:
+        positions = caches["len"][0] + jnp.arange(tokens.shape[1])[None, :]
+
+    def body(x, xs):
+        p_layer, cache = xs
+        y, new_cache = transformer_block(
+            p_layer, x, cfg, mspec=mspec, positions=positions,
+            cache=cache, kv_chunk=kv_chunk,
+        )
+        return y, new_cache
+
+    fn = jax.checkpoint(body) if (remat and caches is None) else body
+    x, new_caches = jax.lax.scan(fn, x, (params["layers"], caches), unroll=unroll)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, tie=cfg.tie_embeddings)
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg, **kw):
+    logits, _ = forward(params, batch["tokens"], cfg, **kw)
+    return L.cross_entropy(logits, batch["labels"], vocab_size=cfg.vocab_size)
+
+
+def init_cache(cfg, batch: int, max_len: int, *, shards: int = 16):
+    """Stacked (per-layer) KV cache for decode."""
+    one = L.init_attn_cache(cfg, batch, max_len, shards=shards)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers, *x.shape)), one
+    )
+
+
+def decode_step(params, caches, tokens, cfg, *, kv_chunk: int = 4096,
+                unroll: bool = False):
+    """One-token decode: tokens (B, 1). Returns (logits (B,1,V), caches)."""
+    logits, new_caches = forward(
+        params, tokens, cfg, caches=caches, kv_chunk=kv_chunk, remat=False,
+        unroll=unroll,
+    )
+    return logits, new_caches

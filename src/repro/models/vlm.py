@@ -1,0 +1,115 @@
+"""Llama-3.2-Vision-style VLM backbone: a dense decoder LM with gated
+cross-attention image layers interleaved every ``cross_attn_every`` layers
+[hf:meta-llama/Llama-3.2-11B-Vision].
+
+Per the assignment carve-out, the vision tower is a STUB: ``img_feats``
+arrives as pre-projected patch embeddings (B, num_image_tokens, d_model)
+from ``input_specs()``. The backbone implements the language side: sites of
+(cross_attn_every - 1) self-attention layers followed by one tanh-gated
+cross-attention layer (gates init 0 => identity at init, as in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.params import ParamSpec, stacked
+
+
+def sites_of(cfg):
+    every = cfg.cross_attn_every
+    assert every and cfg.num_layers % every == 0
+    return cfg.num_layers // every, every - 1
+
+
+def cross_block_schema(cfg, *, shards: int = 16):
+    return {
+        "ln_q": L.rmsnorm_schema(cfg.d_model),
+        "ln_kv": L.rmsnorm_schema(cfg.d_model),
+        "attn": L.attention_schema(cfg, shards=shards),
+        "gate_attn": ParamSpec((), (), init="zeros"),
+        "ln2": L.rmsnorm_schema(cfg.d_model),
+        "mlp": L.mlp_schema(cfg.d_model, cfg.d_ff),
+        "gate_mlp": ParamSpec((), (), init="zeros"),
+    }
+
+
+def schema(cfg, *, shards: int = 16):
+    n_sites, self_per = sites_of(cfg)
+    return {
+        "embed": L.embedding_schema(cfg.padded_vocab, cfg.d_model, tie=cfg.tie_embeddings),
+        "self_layers": stacked(stacked(T.block_schema(cfg, shards=shards), self_per), n_sites),
+        "cross_layers": stacked(cross_block_schema(cfg, shards=shards), n_sites),
+        "ln_f": L.rmsnorm_schema(cfg.d_model),
+    }
+
+
+def cross_block(p, x, img, cfg, *, kv_chunk):
+    h, _ = L.attention_block(
+        p["attn"], L.rmsnorm(p["ln_q"], x, cfg.norm_eps), cfg,
+        mask_spec=L.AttnMaskSpec(causal=False),
+        kv_source=L.rmsnorm(p["ln_kv"], img, cfg.norm_eps),
+        kv_chunk=kv_chunk,
+    )
+    x = x + jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(x.dtype) * h
+    m = L.mlp_block(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x + jnp.tanh(p["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * m
+
+
+def forward(params, tokens, cfg, *, img_feats, caches=None,
+            kv_chunk: int = 1024, remat: bool = True, unroll: bool = False, **_):
+    x = L.embed(params["embed"], tokens)
+    mspec = L.AttnMaskSpec(causal=True)
+    positions = None
+    if caches is not None:
+        positions = caches["len"][0, 0] + jnp.arange(tokens.shape[1])[None, :]
+
+    def self_stack(x, p_stack, cache_stack):
+        def body(x, xs):
+            p_layer, cache = xs
+            return T.transformer_block(
+                p_layer, x, cfg, mspec=mspec, positions=positions,
+                cache=cache, kv_chunk=kv_chunk,
+            )
+
+        fn = jax.checkpoint(body) if (remat and caches is None) else body
+        return jax.lax.scan(fn, x, (p_stack, cache_stack), unroll=unroll)
+
+    def site_body(x, xs):
+        p_self, p_cross, cache_stack = xs
+        x, new_caches = self_stack(x, p_self, cache_stack)
+        x = cross_block(p_cross, x, img_feats, cfg, kv_chunk=kv_chunk)
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(
+        site_body, x, (params["self_layers"], params["cross_layers"], caches),
+        unroll=unroll,
+    )
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, tie=cfg.tie_embeddings)
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg, **kw):
+    logits, _ = forward(params, batch["tokens"], cfg,
+                        img_feats=batch["img_feats"], **kw)
+    return L.cross_entropy(logits, batch["labels"], vocab_size=cfg.vocab_size)
+
+
+def init_cache(cfg, batch: int, max_len: int, *, shards: int = 16):
+    n_sites, self_per = sites_of(cfg)
+    one = L.init_attn_cache(cfg, batch, max_len, shards=shards)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None, None], (n_sites, self_per, *x.shape)), one
+    )
+
+
+def decode_step(params, caches, tokens, cfg, *, img_feats, kv_chunk: int = 4096,
+                unroll: bool = False):
+    logits, new_caches = forward(
+        params, tokens, cfg, img_feats=img_feats, caches=caches,
+        kv_chunk=kv_chunk, remat=False, unroll=unroll,
+    )
+    return logits, new_caches

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    momentum,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine

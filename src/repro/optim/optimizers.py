@@ -1,0 +1,103 @@
+"""Optimizers in pure JAX (optax-style (init, update) pairs).
+
+The framework builds its own optimizer substrate (no optax in this
+container). ``update`` returns (new_params, new_state); learning-rate may be
+a float or a schedule fn(step) -> float. All states are pytrees so they
+shard/checkpoint like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (params, state)
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"]
+        eta = _lr_at(lr, step)
+        new = jax.tree_util.tree_map(lambda p, g: p - eta * g.astype(p.dtype), params, grads)
+        return new, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Schedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params):
+        step, mu = state["step"], state["mu"]
+        eta = _lr_at(lr, step)
+        mu = jax.tree_util.tree_map(lambda m, g: beta * m + g.astype(m.dtype), mu, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda m, g: beta * m + g.astype(m.dtype), mu, grads)
+        else:
+            upd = mu
+        new = jax.tree_util.tree_map(lambda p, u: p - eta * u.astype(p.dtype), params, upd)
+        return new, {"step": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay):
+    def init(params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": z,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, z),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        eta = _lr_at(lr, step - 1)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def step_fn(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - eta * upd).astype(p.dtype)
+
+        new = jax.tree_util.tree_map(step_fn, params, m, v)
+        return new, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(lr: Schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay=weight_decay)

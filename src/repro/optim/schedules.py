@@ -1,0 +1,29 @@
+"""Learning-rate schedules (callables of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup_steps, 1)
+        return jnp.where(s < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (
+    AxisRules,
+    DEFAULT_RULES,
+    activation_specs,
+    cache_pspec,
+    param_pspecs,
+    translate,
+)

@@ -1,0 +1,130 @@
+"""Logical-axis -> PartitionSpec translation (DESIGN.md §5).
+
+Params carry logical axis names (repro.models.params). Physical mapping:
+
+    embed   -> "data"   (FSDP: weights reduce-scattered over the data axis)
+    mlp     -> "model"  (tensor parallel: d_ff, d_inner)
+    heads   -> "model"  (tensor parallel: attention / SSM heads)
+    vocab   -> "model"
+    expert  -> "model"  (expert parallel, when num_experts divides the axis)
+    kv / layers / expert_in / None -> replicated
+
+Safety valves, applied per-tensor and in order:
+  1. a physical axis is used at most once per tensor (first dim wins);
+  2. a dim not divisible by the axis size falls back to replicated
+     (e.g. mixtral's 8 experts on a 16-way model axis -> experts
+     replicated, d_ff sharded instead — exactly the 2D layout DESIGN.md
+     prescribes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    table: dict
+
+    def physical(self, logical: Optional[str]):
+        return self.table.get(logical)
+
+
+DEFAULT_RULES = AxisRules(
+    {
+        "embed": "data",
+        "mlp": "model",
+        "heads": "model",
+        "vocab": "model",
+        "expert": "model",
+    }
+)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def translate(axes, shape, mesh: Mesh, rules: AxisRules = DEFAULT_RULES) -> P:
+    """Logical axes tuple (len == ndim) -> PartitionSpec for this mesh.
+
+    Embedding/unembedding tensors (any tensor with a "vocab" axis) shard
+    only the vocab dim: FSDP-sharding their "embed" dim puts the unembed
+    contraction over a sharded dim and SPMD inserts a (B, S, V) fp32
+    partial-sum all-reduce — measured at 38 GiB per occurrence on
+    qwen2-0.5b/train_4k (EXPERIMENTS.md §Perf iteration 0)."""
+    used = set()
+    out = []
+    vocab_tensor = "vocab" in axes
+    for dim, logical in zip(shape, axes):
+        phys = rules.physical(logical)
+        if vocab_tensor and logical == "embed":
+            phys = None
+        if (
+            phys is None
+            or phys in used
+            or phys not in mesh.shape
+            or dim % _axis_size(mesh, phys) != 0
+        ):
+            out.append(None)
+        else:
+            out.append(phys)
+            used.add(phys)
+    return P(*out)
+
+
+def param_pspecs(logical_tree, abstract_tree, mesh: Mesh,
+                 rules: AxisRules = DEFAULT_RULES):
+    """Pytree of PartitionSpec matching the parameter pytree."""
+    return jax.tree_util.tree_map(
+        lambda axes, ab: translate(axes, ab.shape, mesh, rules),
+        logical_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def batch_axes(mesh: Mesh):
+    """Physical axes carrying the batch dim: ("pod","data") when multi-pod."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_shard(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def activation_specs(mesh: Mesh, batch: int, *, extra_dims: int = 1) -> P:
+    """Spec for (B, S, ...) activations/token batches."""
+    ba = batch_axes(mesh)
+    if batch % batch_shard(mesh) == 0:
+        return P(ba, *([None] * extra_dims))
+    return P(*([None] * (1 + extra_dims)))
+
+
+def cache_pspec(mesh: Mesh, cache_shape, *, stacked_dims: int = 1) -> P:
+    """Spec for a stacked KV cache (L..., B, S, H, D).
+
+    Prefers batch -> (pod?,data), heads -> model. When batch is too small
+    (long_500k: B=1) the *sequence* dim shards over the data axes instead
+    (flash-decode layout; softmax reduction collectives inserted by SPMD).
+    """
+    lead = [None] * stacked_dims
+    b, s, h, d = cache_shape[stacked_dims:]
+    ba = batch_axes(mesh)
+    model_ok = "model" in mesh.shape and h % mesh.shape["model"] == 0
+    hspec = "model" if model_ok else None
+    if b % batch_shard(mesh) == 0:
+        return P(*lead, ba, None, hspec, None)
+    if s % batch_shard(mesh) == 0:
+        return P(*lead, None, ba, hspec, None)
+    return P(*lead, None, None, hspec, None)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

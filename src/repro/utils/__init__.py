@@ -1,0 +1,7 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_flatten_with_paths,
+    tree_global_norm,
+    tree_zeros_like,
+)

@@ -1,0 +1,10 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see the single real CPU device; only launch/dryrun.py (a
+# __main__ entry point, never imported by tests) forces 512 devices.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

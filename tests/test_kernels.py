@@ -1,0 +1,112 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracle across
+shape/dtype sweeps (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.dorefa import BLOCK_ROWS, LANE
+
+SHAPES = [(17,), (128,), (4096,), (32768,), (100_001,), (3, 77, 11)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+BITS = [1, 2, 4, 8, 16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bits", [1, 4, 8])
+def test_quantize_dequantize_matches_ref(shape, dtype, bits):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 0.3).astype(dtype)
+    got = ops.quantize_dequantize(x, bits, use_pallas=True)
+    scale = ops.max_abs_scale(x.reshape(-1))
+    want = ref.quantize_dequantize_ref(x.astype(jnp.float32), bits, scale)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=1e-2 if dtype == jnp.bfloat16 else 1e-6, atol=1e-2 if dtype == jnp.bfloat16 else 1e-6,
+    )
+    assert got.dtype == x.dtype and got.shape == x.shape
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_pack_unpack_roundtrip(bits):
+    x = jax.random.normal(jax.random.PRNGKey(1), (50_000,)) * 2.0
+    codes, scale = ops.quantize_pack(x, bits, use_pallas=True)
+    back = ops.unpack_dequantize(codes, scale, bits, x.size, use_pallas=True)
+    want = ops.quantize_dequantize(x, bits)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(want), atol=1e-6)
+    # codes bounded by +-(2^b - 1)
+    assert int(jnp.max(jnp.abs(codes))) <= 2**bits - 1
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_weighted_aggregate_matches_ref(k):
+    key = jax.random.PRNGKey(2)
+    n = BLOCK_ROWS * LANE * 2
+    xs = jax.random.normal(key, (k, n))
+    packed = [ops.quantize_pack(xs[i], 4) for i in range(k)]
+    codes = jnp.stack([c for c, _ in packed])
+    scales = jnp.stack([s for _, s in packed])
+    w = jax.random.dirichlet(key, jnp.ones(k))
+    got = ops.weighted_aggregate(codes, scales, w, 4, use_pallas=True)
+    want = ref.weighted_aggregate_ref(
+        codes.reshape(k, -1), scales, w, 4
+    ).reshape(got.shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_aggregate_linearity():
+    """Aggregation is linear: agg(w) ~ sum w_k dq_k (oracle identity)."""
+    n = BLOCK_ROWS * LANE
+    xs = [jax.random.normal(jax.random.PRNGKey(i), (n,)) for i in range(3)]
+    packed = [ops.quantize_pack(x, 8) for x in xs]
+    codes = jnp.stack([c for c, _ in packed])
+    scales = jnp.stack([s for _, s in packed])
+    w = jnp.asarray([0.2, 0.3, 0.5])
+    agg = ops.weighted_aggregate(codes, scales, w, 8, use_pallas=True).reshape(-1)
+    manual = sum(
+        w[i] * ops.unpack_dequantize(codes[i], scales[i], 8, n) for i in range(3)
+    )
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(manual), rtol=1e-5,
+                               atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 100_000), st.integers(0, 2**31 - 1))
+def test_quantize_property_sweep(bits, n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    got = ops.quantize_dequantize(x, bits, use_pallas=(n <= 40_000))
+    scale = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(got))) <= scale + 1e-5
+    assert float(jnp.max(jnp.abs(got - x))) <= scale / (2**bits - 1) + 1e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hkv,g,d,s,vl", [
+    (1, 1, 1, 128, 256, 256),
+    (2, 2, 3, 128, 512, 300),
+    (1, 4, 2, 64, 1024, 1),
+    (3, 1, 8, 128, 256, 129),
+])
+def test_flash_decode_matches_ref(b, hkv, g, d, s, vl, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, hkv, g, d)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d)).astype(dtype)
+    got = ops.flash_decode(q, k, v, jnp.asarray(vl), use_pallas=True)
+    want = ref.flash_decode_ref(q, k, v, jnp.asarray(vl))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_decode_block_invariance():
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 2, 2, 128))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1024, 2, 128))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 1024, 2, 128))
+    a = ops.flash_decode(q, k, v, jnp.asarray(700), use_pallas=True, block_s=256)
+    b = ops.flash_decode(q, k, v, jnp.asarray(700), use_pallas=True, block_s=512)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5)

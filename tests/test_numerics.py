@@ -1,0 +1,174 @@
+"""Numerical-algorithm oracles: chunked attention and the SSD scan are
+validated against naive reference implementations across shape sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+# --------------------------------------------------------------------------
+# chunked (online-softmax) attention vs naive softmax
+# --------------------------------------------------------------------------
+
+def naive_attention(q, k, v, mask):
+    """Full (S, S) softmax reference. q: (B,Sq,H,D); k,v: (B,Sk,Hkv,D)."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    s = s / jnp.sqrt(d) + jnp.where(mask, 0.0, -jnp.inf)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+
+
+@pytest.mark.parametrize("chunk", [3, 8, 64])
+@pytest.mark.parametrize("spec", [
+    L.AttnMaskSpec(causal=True),
+    L.AttnMaskSpec(causal=True, window=5),
+    L.AttnMaskSpec(causal=True, block_local=8),
+    L.AttnMaskSpec(causal=False),
+])
+def test_chunked_attention_matches_naive(chunk, spec):
+    key = jax.random.PRNGKey(0)
+    b, sq, sk, h, hkv, d = 2, 17, 17, 4, 2, 8
+    q = jax.random.normal(key, (b, sq, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, sk, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, sk, hkv, d))
+    got = L.chunked_attention(q, k, v, mask_spec=spec, kv_chunk=chunk)
+    mask = L._mask_block(jnp.arange(sq), jnp.arange(sk), spec)
+    want = naive_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=2e-2, rtol=2e-2)  # bf16 compute
+
+
+def test_chunked_attention_q_offset_decode():
+    """Decode semantics: q at position `off` over a cache of valid length."""
+    key = jax.random.PRNGKey(3)
+    b, h, hkv, d, smax = 1, 2, 2, 8, 32
+    off = 11
+    q = jax.random.normal(key, (b, 1, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, smax, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, smax, hkv, d))
+    got = L.chunked_attention(
+        q, k, v, mask_spec=L.AttnMaskSpec(causal=True), q_offset=off,
+        kv_chunk=8, kv_valid_len=jnp.asarray(off + 1))
+    # oracle: attend over exactly the first off+1 keys
+    want = naive_attention(q, k[:, : off + 1], v[:, : off + 1],
+                           jnp.ones((1, off + 1), bool))
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=2e-2, rtol=2e-2)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_chunked_attention_chunk_invariance(sk, chunk, seed):
+    """Output must not depend on the chunking factor."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 5, 2, 4))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, sk, 2, 4))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, sk, 2, 4))
+    spec = L.AttnMaskSpec(causal=False)
+    a = L.chunked_attention(q, k, v, mask_spec=spec, kv_chunk=chunk)
+    b_ = L.chunked_attention(q, k, v, mask_spec=spec, kv_chunk=max(sk, 1))
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b_, np.float32), atol=3e-2, rtol=3e-2)
+
+
+# --------------------------------------------------------------------------
+# SSD chunked scan vs naive recurrence
+# --------------------------------------------------------------------------
+
+def naive_ssd(x, dt, a_log, b, c, init=None):
+    """Sequential SSM recurrence oracle (fp64-ish via fp32 step loop)."""
+    bsz, s, h, p_ = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    a = -np.exp(np.asarray(a_log, np.float64))
+    xn = np.asarray(x, np.float64)
+    dtn = np.asarray(dt, np.float64)
+    bn = np.repeat(np.asarray(b, np.float64), rep, axis=2)
+    cn = np.repeat(np.asarray(c, np.float64), rep, axis=2)
+    hst = np.zeros((bsz, h, p_, n)) if init is None else np.asarray(init, np.float64)
+    ys = []
+    for t in range(s):
+        dec = np.exp(dtn[:, t] * a[None, :])                       # (B,H)
+        xd = xn[:, t] * dtn[:, t][..., None]                       # (B,H,P)
+        hst = hst * dec[..., None, None] + xd[..., None] * bn[:, t][:, :, None, :]
+        ys.append(np.einsum("bhpn,bhn->bhp", hst, cn[:, t]))
+    return np.stack(ys, axis=1), hst
+
+
+@pytest.mark.parametrize("s,chunk", [(8, 4), (12, 4), (16, 8), (7, 7)])
+def test_ssd_chunked_matches_recurrence(s, chunk):
+    key = jax.random.PRNGKey(0)
+    bsz, h, p_, g, n = 2, 4, 4, 2, 3
+    x = jax.random.normal(key, (bsz, s, h, p_)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (bsz, s, h)))
+    a_log = jnp.log(jax.random.uniform(jax.random.fold_in(key, 2), (h,), minval=1.0, maxval=4.0))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (bsz, s, g, n)) * 0.5
+    c = jax.random.normal(jax.random.fold_in(key, 4), (bsz, s, g, n)) * 0.5
+    if s % chunk:
+        pytest.skip("chunk must divide s for the raw scan")
+    y, final = M.ssd_chunked(x, dt, a_log, b, c, chunk=chunk)
+    y_ref, final_ref = naive_ssd(x, dt, a_log, b, c)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), final_ref, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_init_state_continuation():
+    """Chunk-wise prefill: running two halves with carried state == one run."""
+    key = jax.random.PRNGKey(7)
+    bsz, s, h, p_, g, n = 1, 16, 2, 4, 1, 3
+    x = jax.random.normal(key, (bsz, s, h, p_)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (bsz, s, h)))
+    a_log = jnp.log(jax.random.uniform(jax.random.fold_in(key, 2), (h,), minval=1.0, maxval=4.0))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (bsz, s, g, n)) * 0.5
+    c = jax.random.normal(jax.random.fold_in(key, 4), (bsz, s, g, n)) * 0.5
+    y_full, st_full = M.ssd_chunked(x, dt, a_log, b, c, chunk=4)
+    y1, st1 = M.ssd_chunked(x[:, :8], dt[:, :8], a_log, b[:, :8], c[:, :8], chunk=4)
+    y2, st2 = M.ssd_chunked(x[:, 8:], dt[:, 8:], a_log, b[:, 8:], c[:, 8:],
+                            chunk=4, init_state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_step_matches_scan():
+    """O(1) decode recurrence == one more step of the chunked scan."""
+    key = jax.random.PRNGKey(9)
+    bsz, h, p_, g, n = 2, 2, 4, 1, 3
+    st = jax.random.normal(key, (bsz, h, p_, n))
+    x_t = jax.random.normal(jax.random.fold_in(key, 1), (bsz, h, p_))
+    dt_t = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 2), (bsz, h)))
+    a_log = jnp.log(jax.random.uniform(jax.random.fold_in(key, 3), (h,), minval=1.0, maxval=4.0))
+    b_t = jax.random.normal(jax.random.fold_in(key, 4), (bsz, g, n))
+    c_t = jax.random.normal(jax.random.fold_in(key, 5), (bsz, g, n))
+    y, new = M.ssd_step(st, x_t, dt_t, a_log, b_t, c_t)
+    y_ref, new_ref = naive_ssd(x_t[:, None], dt_t[:, None], a_log,
+                               b_t[:, None], c_t[:, None], init=st)
+    np.testing.assert_allclose(np.asarray(y), y_ref[:, 0], atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(new), new_ref, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_bf16_close_to_f32():
+    """The ssm_bf16 lever (§Perf pair A iteration 6) stays within bf16 noise."""
+    key = jax.random.PRNGKey(11)
+    bsz, s, h, p_, g, n = 1, 32, 2, 8, 1, 4
+    x = jax.random.normal(key, (bsz, s, h, p_)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (bsz, s, h)))
+    a_log = jnp.log(jax.random.uniform(jax.random.fold_in(key, 2), (h,), minval=1.0, maxval=4.0))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (bsz, s, g, n)) * 0.5
+    c = jax.random.normal(jax.random.fold_in(key, 4), (bsz, s, g, n)) * 0.5
+    y32, _ = M.ssd_chunked(x, dt, a_log, b, c, chunk=8)
+    y16, _ = M.ssd_chunked(x, dt, a_log, b, c, chunk=8,
+                           einsum_dtype=jnp.bfloat16)
+    rel = float(jnp.max(jnp.abs(y16 - y32)) / (jnp.max(jnp.abs(y32)) + 1e-9))
+    assert rel < 0.03

@@ -1,0 +1,78 @@
+"""DoReFa quantization (paper Eq. 7) properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+
+def test_levels():
+    assert float(q.dorefa_levels(1)) == 1.0
+    assert float(q.dorefa_levels(8)) == 255.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 2**31 - 1))
+def test_quantize_error_bound(bits, seed):
+    """|x - q(x)| <= scale / (2 * (2^b - 1)) for x in [-scale, scale]."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 0.5
+    y = q.quantize(x, bits)
+    scale = float(jnp.max(jnp.abs(x)))
+    bound = scale / (2 * (2**bits - 1)) + 1e-6
+    assert float(jnp.max(jnp.abs(x - y))) <= bound
+
+
+def test_quantize_paper_exact_matches_eq7():
+    """With scale=1 the codec is exactly (1/a) round(a*pi)."""
+    x = jnp.asarray([-1.0, -0.51, 0.0, 0.26, 0.74, 1.0])
+    for b in (1, 2, 3):
+        a = 2**b - 1
+        np.testing.assert_allclose(
+            np.asarray(q.quantize(x, b, scale=1.0)),
+            np.round(a * np.asarray(x)) / a,
+            atol=1e-7,
+        )
+
+
+def test_quantize_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    y = q.quantize(x, 5)
+    # quantizing an already-quantized tensor with the same scale is identity
+    z = q.quantize(y, 5, scale=float(jnp.max(jnp.abs(x))))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(z), atol=1e-6)
+
+
+def test_bits_32_passthrough():
+    x = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    np.testing.assert_array_equal(np.asarray(q.quantize(x, 32)), np.asarray(x))
+
+
+def test_adaptive_bits_formula():
+    # r = max(I/c, 1); b = floor(32/r) clamped to [1, 32]  (paper §II-B)
+    assert int(q.adaptive_bits(3200.0, 1600.0)) == 16
+    assert int(q.adaptive_bits(3200.0, 3200.0)) == 32
+    assert int(q.adaptive_bits(3200.0, 1e12)) == 32
+    assert int(q.adaptive_bits(3200.0, 10.0)) == 1  # clamp at 1 bit
+    assert int(q.adaptive_bits(3200.0, 800.0)) == 8
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1e3, 1e9), st.floats(1.0, 1e9))
+def test_adaptive_bits_monotone_in_budget(payload, budget):
+    b1 = int(q.adaptive_bits(payload, budget))
+    b2 = int(q.adaptive_bits(payload, budget * 2))
+    assert 1 <= b1 <= 32 and b1 <= b2
+
+
+def test_quantize_tree_structure_preserved():
+    tree = {"a": jnp.ones((4, 4)), "b": [jnp.zeros(3), jnp.full((2,), 0.3)]}
+    out = q.quantize_tree(tree, 4)
+    assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(tree)
+
+
+def test_error_decreases_with_bits():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1024,))
+    errs = [float(q.quantization_error(x, b)) for b in (1, 2, 4, 8, 16)]
+    assert all(e1 > e2 for e1, e2 in zip(errs, errs[1:]))

@@ -1,0 +1,142 @@
+"""Sharding rule translation + roofline HLO parsing (no multi-device mesh
+needed: translate() only reads mesh.shape)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import roofline as rl
+from repro.sharding import rules as sh
+
+
+class FakeMesh:
+    """Stands in for jax.sharding.Mesh: rules only use .shape / contains."""
+
+    def __init__(self, **axes):
+        self.shape = axes
+
+    @property
+    def size(self):
+        out = 1
+        for v in self.shape.values():
+            out *= v
+        return out
+
+
+MESH = FakeMesh(data=16, model=16)
+POD = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_translate_basic_mapping():
+    spec = sh.translate(("embed", "mlp"), (4096, 12288), MESH)
+    assert spec == P("data", "model")
+    spec = sh.translate(("heads", "kv", "embed"), (32, 128, 4096), MESH)
+    assert spec == P("model", None, "data")
+
+
+def test_translate_divisibility_fallback():
+    # 8 experts on a 16-way model axis -> replicated, d_ff takes model
+    spec = sh.translate(("expert", "embed", "mlp"), (8, 6144, 16384), MESH)
+    assert spec == P(None, "data", "model")
+    # 16 experts -> expert parallel, d_ff falls back (axis already used)
+    spec = sh.translate(("expert", "embed", "mlp"), (16, 5120, 8192), MESH)
+    assert spec == P("model", "data", None)
+
+
+def test_translate_vocab_tensors_not_fsdp():
+    # embedding: vocab sharded, embed dim replicated (perf iteration 0)
+    spec = sh.translate(("vocab", "embed"), (152064, 896), MESH)
+    assert spec == P("model", None)
+
+
+def test_translate_no_duplicate_axis():
+    spec = sh.translate(("mlp", "heads"), (128, 32), MESH)
+    assert spec[0] == "model" and spec[1] is None
+
+
+def test_batch_axes_multi_pod():
+    assert sh.batch_axes(MESH) == ("data",)
+    assert sh.batch_axes(POD) == ("pod", "data")
+    assert sh.batch_shard(POD) == 32
+
+
+def test_cache_pspec_batch_vs_seq():
+    # decode_32k: batch 128 shards over data
+    spec = sh.cache_pspec(MESH, (24, 128, 32768, 16, 128), stacked_dims=1)
+    assert spec == P(None, ("data",), None, "model", None)
+    # long_500k: batch 1 -> sequence shards instead
+    spec = sh.cache_pspec(MESH, (24, 1, 524288, 16, 128), stacked_dims=1)
+    assert spec == P(None, None, ("data",), "model", None)
+
+
+def test_activation_specs():
+    assert sh.activation_specs(MESH, 256) == P(("data",), None)
+    assert sh.activation_specs(MESH, 1) == P(None, None)
+
+
+# ---- roofline parsing ----------------------------------------------------
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[16,4096]{1,0} parameter(0)
+  %ag = f32[16,4096,152064]{1,0,2} all-gather(%p0), dimensions={2}
+  %ar = f32[16,4096,896]{2,1,0} all-reduce(%p0), to_apply=%sum
+  %tup = (f32[8,8]{1,0}, bf16[4,4]{1,0}) all-reduce(%p0, %p0), to_apply=%sum
+  %rs = bf16[2048]{0} reduce-scatter(%p0), dimensions={0}
+  %a2a = f32[64,64]{1,0} all-to-all(%p0), dimensions={0}
+  %add = f32[16,4096]{1,0} add(%p0, %p0)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    stats = rl.parse_collectives(HLO)
+    assert stats.count_by_kind["all-gather"] == 1
+    assert stats.count_by_kind["all-reduce"] == 2
+    assert stats.count_by_kind["reduce-scatter"] == 1
+    assert stats.count_by_kind["all-to-all"] == 1
+    assert stats.bytes_by_kind["all-gather"] == 16 * 4096 * 152064 * 4
+    assert stats.bytes_by_kind["all-reduce"] == (
+        16 * 4096 * 896 * 4 + 8 * 8 * 4 + 4 * 4 * 2)
+    assert stats.bytes_by_kind["reduce-scatter"] == 2048 * 2
+    # plain ops not counted
+    assert stats.total_bytes < 16 * 4096 * 152064 * 4 * 2
+
+
+def test_shape_bytes_tuple_and_scalar():
+    assert rl._shape_bytes("f32[4,4]{1,0}") == 64
+    assert rl._shape_bytes("(f32[2], bf16[2])") == 8 + 4
+    assert rl._shape_bytes("pred[8]") == 8
+
+
+def test_roofline_terms_and_bottleneck():
+    from repro.config import INPUT_SHAPES
+    from repro.configs import get_config
+
+    cfg = get_config("qwen2-0.5b")
+    shape = INPUT_SHAPES["train_4k"]
+    r = rl.Roofline(
+        flops=1e12, hbm_bytes=1e12, collective_bytes=1e10,
+        collectives=rl.CollectiveStats({}, {}),
+        model_flops=rl.model_flops(cfg, shape, n_chips=256),
+    )
+    assert r.t_compute == pytest.approx(1e12 / rl.PEAK_FLOPS)
+    assert r.t_memory == pytest.approx(1e12 / rl.HBM_BW)
+    assert r.bottleneck == "memory"
+    # 6*N*D/chips sanity: ~0.5B params * 6 * 1M tokens / 256
+    assert r.model_flops == pytest.approx(
+        6 * cfg.active_param_count() * 256 * 4096 / 256)
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro.config import INPUT_SHAPES
+    from repro.configs import get_config
+
+    cfg = get_config("mixtral-8x22b")
+    assert cfg.active_param_count() < 0.45 * cfg.param_count()
+    f = rl.model_flops(cfg, INPUT_SHAPES["train_4k"], n_chips=256)
+    assert f == pytest.approx(
+        6 * cfg.active_param_count() * 256 * 4096 / 256)

@@ -1,0 +1,178 @@
+"""Optimizers, data pipeline, checkpointing, channel model."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core import channel
+from repro.data import dirichlet_partition, make_mnist_like, synthetic_token_batches
+from repro.optim import adam, adamw, momentum, sgd
+from repro.optim.schedules import cosine_decay, linear_warmup_cosine
+
+
+# ---- optimizers ----------------------------------------------------------
+
+def _quadratic_min(opt, steps=400):
+    target = jnp.asarray([1.0, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    return float(loss(params))
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), momentum(0.05), adam(0.05),
+                                 adamw(0.05, weight_decay=0.0)])
+def test_optimizers_minimize_quadratic(opt):
+    assert _quadratic_min(opt) < 1e-3
+
+
+def test_adam_matches_reference_numpy():
+    """One Adam step against a hand-written numpy reference."""
+    g = np.array([0.3, -0.2], np.float32)
+    p = np.array([1.0, 1.0], np.float32)
+    lr, b1, b2, eps = 0.1, 0.9, 0.999, 1e-8
+    m = (1 - b1) * g
+    v = (1 - b2) * g**2
+    ref = p - lr * (m / (1 - b1)) / (np.sqrt(v / (1 - b2)) + eps)
+
+    opt = adam(lr, b1, b2, eps)
+    params = {"w": jnp.asarray(p)}
+    state = opt.init(params)
+    new, _ = opt.update({"w": jnp.asarray(g)}, state, params)
+    np.testing.assert_allclose(np.asarray(new["w"]), ref, rtol=1e-5)
+
+
+def test_schedules():
+    s = linear_warmup_cosine(1.0, 10, 110)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert float(s(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(s(jnp.asarray(110))) < 0.2
+    c = cosine_decay(1.0, 100)
+    assert float(c(jnp.asarray(0))) == pytest.approx(1.0)
+
+
+# ---- data ----------------------------------------------------------------
+
+def test_partition_is_exact_cover(rng):
+    labels = rng.integers(0, 10, 997).astype(np.int32)
+    shards = dirichlet_partition(labels, 13, seed=0)
+    all_idx = np.concatenate(shards)
+    assert len(all_idx) == len(labels)
+    assert len(np.unique(all_idx)) == len(labels)
+
+
+def test_partition_non_iid(rng):
+    labels = rng.integers(0, 10, 5000).astype(np.int32)
+    shards = dirichlet_partition(labels, 20, alpha=0.2, seed=0)
+    # class distributions should differ across devices (non-iid)
+    dists = []
+    for s in shards:
+        h = np.bincount(labels[s], minlength=10) / max(len(s), 1)
+        dists.append(h)
+    dists = np.array(dists)
+    assert np.mean(np.std(dists, axis=0)) > 0.05
+    sizes = np.array([len(s) for s in shards])
+    assert sizes.std() > 0  # sizes differ too
+
+
+def test_mnist_like_deterministic_and_learnable():
+    a = make_mnist_like(num_samples=1000, seed=3)
+    b = make_mnist_like(num_samples=1000, seed=3)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+    assert a.x_train.shape[1] == 784
+    assert 0.85 <= a.x_train.max() <= 1.0
+    # 90/10 split (Table I)
+    assert len(a.x_train) == 900 and len(a.x_test) == 100
+
+
+def test_token_stream_deterministic():
+    it1 = synthetic_token_batches(512, 2, 16, seed=7)
+    it2 = synthetic_token_batches(512, 2, 16, seed=7)
+    t1, l1 = next(it1)
+    t2, l2 = next(it2)
+    np.testing.assert_array_equal(t1, t2)
+    assert t1.shape == (2, 16) and l1.shape == (2, 16)
+    np.testing.assert_array_equal(t1[:, 1:], l1[:, :-1])
+
+
+# ---- checkpoint ----------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {
+        "params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                   "b": jnp.ones(3, jnp.bfloat16)},
+        "step": 7,
+        "names": ["a", "b"],
+        "nested": (jnp.zeros(2, jnp.int32), None),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.msgpack.zst")
+        save_checkpoint(path, tree)
+        back = load_checkpoint(path)
+    np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert back["params"]["b"].dtype == jnp.bfloat16
+    assert back["step"] == 7 and back["names"] == ["a", "b"]
+    assert back["nested"][1] is None
+
+
+# ---- channel -------------------------------------------------------------
+
+def test_channel_pathloss_monotone_in_distance():
+    cfg = channel.CellConfig()
+    d = jnp.asarray([50.0, 100.0, 400.0])
+    g = channel.large_scale_gain(d, cfg)
+    assert float(g[0]) > float(g[1]) > float(g[2])
+
+
+def test_rayleigh_unit_power():
+    cfg = channel.CellConfig()
+    h = channel.sample_small_scale(jax.random.PRNGKey(0), (200_000,))
+    assert float(jnp.mean(h**2)) == pytest.approx(1.0, rel=0.02)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_positions_within_cell(seed):
+    cfg = channel.CellConfig(num_devices=50)
+    d = np.asarray(channel.sample_positions(jax.random.PRNGKey(seed), cfg))
+    assert np.all(d >= cfg.min_distance_m) and np.all(d <= cfg.cell_radius_m)
+
+
+def test_noise_power_matches_dbm():
+    cfg = channel.CellConfig()
+    # -174 dBm/Hz * 4 MHz = -174 + 10log10(4e6) ~= -107.98 dBm
+    expected = 10 ** ((-174 + 10 * np.log10(4e6)) / 10) * 1e-3
+    assert cfg.noise_power_w == pytest.approx(expected, rel=1e-6)
+
+
+def test_trainer_checkpoint_resume(tmp_path):
+    """train N steps + save == train k, save, resume, train N-k (same data)."""
+    from repro.launch.train import main as train_main
+
+    ck1 = str(tmp_path / "a.ckpt")
+    ck2 = str(tmp_path / "b.ckpt")
+    base = ["--arch", "qwen2-0.5b", "--smoke", "--batch", "2", "--seq", "32",
+            "--fl-bits", "8"]
+    train_main([*base, "--steps", "6", "--save", ck1])
+    train_main([*base, "--steps", "3", "--save", ck2])
+    train_main([*base, "--steps", "6", "--resume", ck2, "--save", ck2])
+
+    a = load_checkpoint(ck1)
+    b = load_checkpoint(ck2)
+    assert a["step"] == b["step"] == 6
+    for x, y in zip(jax.tree_util.tree_leaves(a["params"]),
+                    jax.tree_util.tree_leaves(b["params"])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=2e-5, rtol=2e-5)

@@ -1,0 +1,100 @@
+"""End-to-end behaviour tests for the paper's system (FL over NOMA)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import channel, fl
+from repro.data import dirichlet_partition, make_mnist_like
+
+M = 30  # small cell for test speed
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    ds = make_mnist_like(num_samples=2500, seed=0)
+    cell = channel.CellConfig(num_devices=M)
+    shards = dirichlet_partition(ds.y_train, M, seed=0)
+    return ds, cell, shards
+
+
+def _run(ds, cell, shards, *, rounds=8, scheduler="lazy-gwmin",
+         power="max", uplink="noma", compression="adaptive", seed=0):
+    cfg = FLConfig(num_devices=M, group_size=3, num_rounds=rounds,
+                   scheduler=scheduler, power_mode=power,
+                   compression=compression, seed=seed)
+    return fl.run_federated_learning(ds, shards, cell, cfg, uplink=uplink)
+
+
+def test_fl_accuracy_improves(small_world):
+    ds, cell, shards = small_world
+    res = _run(ds, cell, shards, rounds=10)
+    accs = res.accuracies()
+    assert accs[-1] > 0.3, f"final accuracy too low: {accs[-1]}"
+    assert accs[-1] > accs[0]
+
+
+def test_constraint_c1_each_device_once(small_world):
+    ds, cell, shards = small_world
+    res = _run(ds, cell, shards, rounds=8)
+    seen = [d for log in res.logs for d in log.devices]
+    assert len(seen) == len(set(seen))
+
+
+def test_noma_rounds_faster_than_tdma(small_world):
+    """Paper §IV: NOMA round = t + T_d, TDMA round = K*t + T_d."""
+    ds, cell, shards = small_world
+    noma_res = _run(ds, cell, shards, rounds=4, uplink="noma")
+    tdma_res = _run(ds, cell, shards, rounds=4, uplink="tdma")
+    t_noma = np.diff(noma_res.times())
+    t_tdma = np.diff(tdma_res.times())
+    # identical downlink; uplink is K x longer for TDMA
+    np.testing.assert_allclose(
+        t_tdma - t_noma, (3 - 1) * cell.slot_seconds, rtol=1e-6)
+
+
+def test_adaptive_bits_recorded_and_bounded(small_world):
+    ds, cell, shards = small_world
+    res = _run(ds, cell, shards, rounds=5)
+    for log in res.logs:
+        assert np.all(log.bits >= 1) and np.all(log.bits <= 32)
+        assert np.all(log.compression_ratios >= 1.0)
+
+
+def test_tdma_uses_full_precision(small_world):
+    ds, cell, shards = small_world
+    res = _run(ds, cell, shards, rounds=3, uplink="tdma")
+    for log in res.logs:
+        assert np.all(log.bits == 32)
+
+
+def test_deterministic_given_seed(small_world):
+    ds, cell, shards = small_world
+    r1 = _run(ds, cell, shards, rounds=3, seed=5)
+    r2 = _run(ds, cell, shards, rounds=3, seed=5)
+    np.testing.assert_array_equal(r1.accuracies(), r2.accuracies())
+    assert [l.devices for l in r1.logs] == [l.devices for l in r2.logs]
+
+
+def test_scheduler_weighted_rate_ordering(small_world):
+    """Greedy MWIS schedule achieves >= weighted sum rate of random/RR."""
+    ds, cell, shards = small_world
+    from repro.core import scheduling
+
+    sizes = np.array([len(s) for s in shards], float)
+    weights = sizes / sizes.sum()
+    key = jax.random.PRNGKey(0)
+    dist = channel.sample_positions(key, cell)
+    gains = np.asarray(channel.sample_round_channels(
+        jax.random.fold_in(key, 2), dist, cell, 5))
+    g = scheduling.lazy_greedy_schedule(
+        gains, weights, 3, pmax=cell.max_power_w,
+        noise_power=cell.noise_power_w)
+    r = scheduling.random_schedule(
+        np.random.default_rng(0), gains, weights, 3,
+        pmax=cell.max_power_w, noise_power=cell.noise_power_w)
+    rr = scheduling.round_robin_schedule(
+        gains, weights, 3, pmax=cell.max_power_w,
+        noise_power=cell.noise_power_w)
+    assert g.weighted_sum_rate >= r.weighted_sum_rate
+    assert g.weighted_sum_rate >= rr.weighted_sum_rate
