@@ -8,8 +8,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro.core import rates
 from repro.kernels import ops
 
 N = 1_048_576  # ~1M params (4 MiB f32), LeNet-scale x4
@@ -47,6 +49,29 @@ def main(fast: bool = False):
         lambda: ops.quantize_dequantize(small, 8, use_pallas=True)
         .block_until_ready(), repeats=1)
     emit("kernel.qdq_b8_pallas_interpret", us, f"{small.size} elems")
+
+    # batched SIC group scoring (scheduler candidate batches, K=3)
+    v = 8_192 if fast else 65_536
+    rng = np.random.default_rng(0)
+    g_vk = np.abs(rng.normal(1e-6, 5e-7, (v, 3))) + 1e-8
+    p_vk = np.full((v, 3), 0.01)
+    w_vk = rng.dirichlet(np.ones(3), size=v)
+    noise = 1.6e-14
+    us = timeit(lambda: rates.batched_weighted_rates(p_vk, g_vk, w_vk, noise))
+    emit("kernel.sic_rates_numpy", us, f"{v} groups")
+    pj, gj, wj = jnp.asarray(p_vk), jnp.asarray(g_vk), jnp.asarray(w_vk)
+    out = ops.sic_weighted_rates(pj, gj, wj, noise)  # compile
+    us = timeit(
+        lambda: ops.sic_weighted_rates(pj, gj, wj, noise).block_until_ready())
+    emit("kernel.sic_rates_xla", us, f"{v} groups")
+    vp = 2_048
+    out = ops.sic_weighted_rates(
+        pj[:vp], gj[:vp], wj[:vp], noise, use_pallas=True)
+    us = timeit(
+        lambda: ops.sic_weighted_rates(
+            pj[:vp], gj[:vp], wj[:vp], noise, use_pallas=True
+        ).block_until_ready(), repeats=1)
+    emit("kernel.sic_rates_pallas_interpret", us, f"{vp} groups")
 
 
 if __name__ == "__main__":

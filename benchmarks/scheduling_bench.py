@@ -1,7 +1,9 @@
-"""Algorithm 2 scaling: literal graph vs lazy column generation, and the
-greedy's optimality gap vs brute force (paper §III)."""
+"""Algorithm 2 scaling: literal graph vs lazy column generation, the batched
+SIC rate engine vs the seed's per-subset Python loop, and the greedy's
+optimality gap vs brute force (paper §III)."""
 from __future__ import annotations
 
+import itertools
 import time
 
 import numpy as np
@@ -10,6 +12,7 @@ from benchmarks.common import emit, timeit
 from repro.core import scheduling
 
 NOISE = 1.6e-14
+PMAX = 0.01
 
 
 def _instance(m, t, seed=0):
@@ -17,6 +20,41 @@ def _instance(m, t, seed=0):
     gains = np.abs(rng.normal(1e-6, 5e-7, (t, m))) + 1e-8
     w = rng.dirichlet(np.ones(m))
     return gains, w
+
+
+def _loop_score(subs_vk, t, gains, w, power_fn):
+    """The seed's candidate scorer: one group_weighted_rate call per subset."""
+    return np.array([
+        scheduling.group_weighted_rate(tuple(s), t, gains, w, power_fn, NOISE)[0]
+        for s in subs_vk
+    ])
+
+
+def _candidate_scoring(fast: bool):
+    """Batched engine vs per-subset loop on one round's candidate batch:
+    M=300, K=3, pool of the 64 strongest -> C(64,3) = 41664 subsets."""
+    pool = 32 if fast else 64
+    gains, w = _instance(300, 1)
+    power_fn = scheduling.make_power_fn("max", PMAX, NOISE)
+    solo = w * np.log2(1.0 + (PMAX * gains[0] ** 2) / NOISE)
+    keep = np.argsort(-solo)[:pool]
+    subs = np.array(
+        list(itertools.combinations(sorted(keep.tolist()), 3)), dtype=np.intp
+    )
+    us_loop = timeit(lambda: _loop_score(subs, 0, gains, w, power_fn), repeats=1)
+    us_batch = timeit(
+        lambda: scheduling.score_subsets(subs, 0, gains, w, power_fn, NOISE),
+        repeats=3,
+    )
+    vals_loop = _loop_score(subs, 0, gains, w, power_fn)
+    vals_batch = scheduling.score_subsets(subs, 0, gains, w, power_fn, NOISE)
+    assert np.allclose(vals_loop, vals_batch, rtol=1e-12)
+    emit(f"sched.score_loop_M300_pool{pool}", us_loop, f"{len(subs)} subsets")
+    emit(
+        f"sched.score_batched_M300_pool{pool}",
+        us_batch,
+        f"speedup {us_loop / us_batch:.1f}x",
+    )
 
 
 def main(fast: bool = False):
@@ -38,6 +76,9 @@ def main(fast: bool = False):
         gaps.append(greedy.weighted_sum_rate / best.weighted_sum_rate)
     emit("sched.greedy_vs_optimal", 0.0, f"ratio {np.mean(gaps):.3f}")
 
+    # batched rate engine vs the seed's per-subset loop (the PR's hot path)
+    _candidate_scoring(fast)
+
     # paper scale: M=300, K=3, T=35 (infeasible for the literal graph:
     # C(300,3)*35 = 1.55e8 vertices)
     m, t = (100, 10) if fast else (300, 35)
@@ -49,6 +90,17 @@ def main(fast: bool = False):
          f"wsum {s.weighted_sum_rate:.3f} literal_would_need "
          f"{35 * 4455100 if not fast else 10 * 161700} vertices")
     s.validate(m, 3)
+
+    # larger candidate pools, reachable now that scoring is batched (the
+    # seed's Python loop capped practical pools at ~16)
+    for pool in (16, 48):
+        t0 = time.perf_counter()
+        sp = scheduling.lazy_greedy_schedule(
+            gains, w, 3, noise_power=NOISE, candidate_pool=pool
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"sched.lazy_M{m}_pool{pool}", us,
+             f"wsum {sp.weighted_sum_rate:.3f}")
 
 
 if __name__ == "__main__":

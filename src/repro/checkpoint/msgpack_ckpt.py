@@ -9,12 +9,19 @@ DESIGN.md).
 from __future__ import annotations
 
 import os
+import zlib
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # offline container without the zstd wheel
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 _ARRAY_KEY = "__array__"
@@ -58,7 +65,10 @@ def _decode(node):
 
 def save_checkpoint(path: str, tree) -> None:
     payload = msgpack.packb(_encode(tree), use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    if zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    else:
+        comp = zlib.compress(payload, level=6)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(comp)
@@ -68,5 +78,15 @@ def save_checkpoint(path: str, tree) -> None:
 def load_checkpoint(path: str):
     with open(path, "rb") as f:
         comp = f.read()
-    payload = zstandard.ZstdDecompressor().decompress(comp)
+    # Sniff the frame magic so checkpoints stay readable across containers
+    # with and without the zstd wheel.
+    if comp[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                f"{path} is zstd-compressed but the zstandard module is "
+                "unavailable in this environment"
+            )
+        payload = zstandard.ZstdDecompressor().decompress(comp)
+    else:
+        payload = zlib.decompress(comp)
     return _decode(msgpack.unpackb(payload, raw=False, strict_map_key=False))

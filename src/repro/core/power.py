@@ -31,6 +31,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import rates as rates_lib
+
 
 @dataclasses.dataclass
 class PowerSolution:
@@ -207,19 +209,12 @@ def max_power(gains: np.ndarray, pmax: float) -> np.ndarray:
 
 
 def weighted_rate(powers, gains, weights, noise_power) -> float:
-    """sum_k w_k log2(1 + SINR_k) under SIC, input order (numpy mirror)."""
-    powers = np.asarray(powers, dtype=np.float64)
-    gains = np.asarray(gains, dtype=np.float64)
-    weights = np.asarray(weights, dtype=np.float64)
-    rx = powers * gains**2
-    order = np.argsort(-rx)
-    rx_s = rx[order]
-    tail = np.concatenate([np.cumsum(rx_s[::-1])[::-1][1:], [0.0]])
-    sinr = rx_s / (tail + noise_power)
-    rates = np.log2(1.0 + sinr)
-    out = np.zeros_like(rates)
-    out[order] = rates
-    return float(np.sum(weights * out))
+    """sum_k w_k log2(1 + SINR_k) under SIC, input order.
+
+    Thin wrapper over the shared batched engine (repro.core.rates) so MAPEL,
+    the schedulers, and the kernels all agree on one SIC rate definition.
+    """
+    return rates_lib.weighted_rate(powers, gains, weights, noise_power)
 
 
 def grid_oracle(

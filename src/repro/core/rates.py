@@ -1,0 +1,69 @@
+"""Batched SIC rate engine (paper Eq. 2-4) — the shared hot path.
+
+Every scheduler in this repo scores candidate NOMA groups by their weighted
+sum rate under successive interference cancellation.  The math is identical
+everywhere (decode in descending receive-power order; each device's SINR sees
+only the not-yet-decoded tail as interference), so it lives here once and the
+schedulers call it on a whole (V, K) batch of candidate groups at a time
+instead of once per ``itertools.combinations`` subset:
+
+    R_k = log2(1 + p_k h_k^2 / (sum_{j decoded after k} p_j h_j^2 + sigma^2))
+
+``sic_rates`` broadcasts over arbitrary leading axes; ``batched_weighted_rates``
+is the (V, K) -> (V,) scorer the MWIS schedulers use.  Ties in receive power
+are broken by input index (stable sort), matching the accelerator path in
+``repro.kernels.sic_rates`` bit-for-bit so numpy and Pallas agree on the
+argmax subset.
+
+Accelerator path: ``repro.kernels.ops.sic_weighted_rates`` (jnp/XLA with a
+Pallas kernel behind ``use_pallas=True``).  The numpy path here is the
+control-plane default — scheduling batches are O(10^4) vertices and the
+engine is called from inside Python greedy loops.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sic_rates(powers, gains, noise_power: float) -> np.ndarray:
+    """Per-device SIC spectral efficiencies, input order.
+
+    powers, gains: (..., K) arrays (any matching leading batch axes).
+    Returns (..., K) rates with decode order = descending receive power,
+    ties broken by lower input index first (stable sort).
+    """
+    p = np.asarray(powers, dtype=np.float64)
+    g = np.asarray(gains, dtype=np.float64)
+    rx = p * g * g
+    order = np.argsort(-rx, axis=-1, kind="stable")
+    rx_s = np.take_along_axis(rx, order, axis=-1)
+    # Suffix sum over the decode axis: interference seen by sorted pos i is
+    # the sum of receive powers decoded after it.
+    suffix = np.cumsum(rx_s[..., ::-1], axis=-1)[..., ::-1]
+    tail = np.concatenate([suffix[..., 1:], np.zeros_like(suffix[..., :1])], axis=-1)
+    rates_sorted = np.log2(1.0 + rx_s / (tail + noise_power))
+    out = np.empty_like(rates_sorted)
+    np.put_along_axis(out, order, rates_sorted, axis=-1)
+    return out
+
+
+def batched_weighted_rates(powers_vk, gains_vk, weights_vk, noise_power: float) -> np.ndarray:
+    """Weighted sum rate of V candidate groups in one shot: (V, K) -> (V,).
+
+    powers_vk / gains_vk / weights_vk are per-group rows; the reduction over
+    K is done in input order (matching the scalar ``power.weighted_rate``).
+    """
+    w = np.asarray(weights_vk, dtype=np.float64)
+    return np.sum(w * sic_rates(powers_vk, gains_vk, noise_power), axis=-1)
+
+
+def weighted_rate(powers, gains, weights, noise_power: float) -> float:
+    """Scalar convenience wrapper: one group's weighted sum rate."""
+    return float(
+        batched_weighted_rates(
+            np.atleast_2d(np.asarray(powers, dtype=np.float64)),
+            np.atleast_2d(np.asarray(gains, dtype=np.float64)),
+            np.atleast_2d(np.asarray(weights, dtype=np.float64)),
+            noise_power,
+        )[0]
+    )

@@ -37,9 +37,11 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import power as power_lib
+from repro.core import rates as rates_lib
 
 PowerFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
-# (gains_K, weights_K) -> powers_K
+# (gains_K, weights_K) -> powers_K; may carry a ``batched`` attribute
+# (gains_VK, weights_VK) -> powers_VK for vectorized candidate scoring.
 
 
 # --------------------------------------------------------------------------
@@ -49,10 +51,46 @@ PowerFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
 def make_power_fn(mode: str, pmax: float, noise_power: float) -> PowerFn:
     """'max' -> everyone at p^max; 'mapel' -> optimal MLFP allocation."""
     if mode == "max":
-        return lambda g, w: np.full(len(g), pmax)
+        fn = lambda g, w: np.full(len(g), pmax)
+        fn.batched = lambda g_vk, w_vk: np.full(np.shape(g_vk), pmax)
+        return fn
     if mode == "mapel":
         return lambda g, w: power_lib.mapel(g, w, pmax, noise_power, eps=1e-3).powers
     raise ValueError(f"unknown power mode {mode!r}")
+
+
+def _batched_powers(power_fn: PowerFn, gains_vk, weights_vk) -> np.ndarray:
+    """(V, K) powers for V candidate groups; row loop only for iterative
+    allocators (MAPEL) that expose no vectorized form."""
+    batched = getattr(power_fn, "batched", None)
+    if batched is not None:
+        return batched(gains_vk, weights_vk)
+    return np.stack(
+        [power_fn(g, w) for g, w in zip(gains_vk, weights_vk)]
+    )
+
+
+def score_subsets(
+    subsets_vk: np.ndarray,
+    t: int,
+    gains_tm: np.ndarray,
+    weights_m: np.ndarray,
+    power_fn: PowerFn,
+    noise_power: float,
+) -> np.ndarray:
+    """Weighted sum rate of every candidate group in one engine call.
+
+    subsets_vk: (V, K) int array of device ids, one candidate K-subset per
+    row, all proposed for round t. Replaces the seed's per-subset Python
+    loop (one ``group_weighted_rate`` call per ``itertools.combinations``
+    element) with a single (V, K) ``batched_weighted_rates`` evaluation.
+    """
+    if subsets_vk.size == 0:
+        return np.zeros((len(subsets_vk),))
+    g = gains_tm[t][subsets_vk]
+    w = weights_m[subsets_vk]
+    p = _batched_powers(power_fn, g, w)
+    return rates_lib.batched_weighted_rates(p, g, w, noise_power)
 
 
 def group_weighted_rate(
@@ -64,23 +102,17 @@ def group_weighted_rate(
     noise_power: float,
 ):
     """Weighted sum rate (and powers, rates) of scheduling `subset` at round t."""
-    idx = np.asarray(subset)
+    idx = np.asarray(subset, dtype=np.intp)
     g = gains_tm[t, idx]
     w = weights_m[idx]
     p = power_fn(g, w)
-    rates = _rates(p, g, noise_power)
+    rates = rates_lib.sic_rates(p, g, noise_power)
     return float(np.sum(w * rates)), p, rates
 
 
 def _rates(powers, gains, noise_power):
-    rx = np.asarray(powers) * np.asarray(gains) ** 2
-    order = np.argsort(-rx)
-    rx_s = rx[order]
-    tail = np.concatenate([np.cumsum(rx_s[::-1])[::-1][1:], [0.0]])
-    sinr = rx_s / (tail + noise_power)
-    out = np.zeros_like(sinr)
-    out[order] = np.log2(1.0 + sinr)
-    return out
+    """Thin wrapper kept for back-compat; the math lives in core.rates."""
+    return rates_lib.sic_rates(powers, gains, noise_power)
 
 
 @dataclasses.dataclass
@@ -143,15 +175,13 @@ def build_scheduling_graph(
 ) -> SchedulingGraph:
     """Explicit graph with C(M,K)*T vertices (paper §III-A)."""
     num_rounds, num_devices = gains_tm.shape
-    vertices = [
-        (subset, t)
-        for t in range(num_rounds)
-        for subset in itertools.combinations(range(num_devices), k)
-    ]
-    weights = np.array(
+    subsets = list(itertools.combinations(range(num_devices), k))
+    vertices = [(subset, t) for t in range(num_rounds) for subset in subsets]
+    subs_vk = np.array(subsets, dtype=np.intp).reshape(len(subsets), k)
+    weights = np.concatenate(
         [
-            group_weighted_rate(s, t, gains_tm, weights_m, power_fn, noise_power)[0]
-            for (s, t) in vertices
+            score_subsets(subs_vk, t, gains_tm, weights_m, power_fn, noise_power)
+            for t in range(num_rounds)
         ]
     )
     adjacency = [set() for _ in vertices]
@@ -217,31 +247,34 @@ def literal_graph_schedule(
 # --------------------------------------------------------------------------
 
 def _best_subset_for_round(
-    t, avail, gains_tm, weights_m, k, power_fn, noise_power, candidate_pool
+    t, avail, gains_tm, weights_m, k, power_fn, noise_power, candidate_pool, pmax
 ):
     """Best K-subset of `avail` for round t.
 
     Exact when len(avail) is small; otherwise enumerates subsets of the
     ``candidate_pool`` strongest devices (by singleton weighted rate), which
     preserves the greedy's behaviour in practice (weak devices never enter
-    the argmax group).
+    the argmax group). All C(pool, K) candidates are scored in a single
+    batched rate-engine call; ties keep the lexicographically first subset,
+    matching the seed's sequential strict-improvement loop.
     """
     avail = np.asarray(sorted(avail))
     if len(avail) > candidate_pool:
         # Proxy: weighted interference-free rate of each device alone.
         g = gains_tm[t, avail]
-        solo = weights_m[avail] * np.log2(1.0 + (0.01 * g**2) / noise_power)
+        solo = weights_m[avail] * np.log2(1.0 + (pmax * g**2) / noise_power)
         keep = avail[np.argsort(-solo)[:candidate_pool]]
     else:
         keep = avail
-    best_val, best_sub = -np.inf, None
-    for subset in itertools.combinations(sorted(keep.tolist()), min(k, len(keep))):
-        val, _, _ = group_weighted_rate(
-            subset, t, gains_tm, weights_m, power_fn, noise_power
-        )
-        if val > best_val:
-            best_val, best_sub = val, subset
-    return best_val, best_sub
+    kk = min(k, len(keep))
+    subs_vk = np.array(
+        list(itertools.combinations(sorted(keep.tolist()), kk)), dtype=np.intp
+    ).reshape(-1, kk)
+    if len(subs_vk) == 0:
+        return -np.inf, None
+    vals = score_subsets(subs_vk, t, gains_tm, weights_m, power_fn, noise_power)
+    i_best = int(np.argmax(vals))
+    return float(vals[i_best]), tuple(subs_vk[i_best].tolist())
 
 
 def lazy_greedy_schedule(
@@ -252,9 +285,14 @@ def lazy_greedy_schedule(
     power_mode="max",
     pmax=0.01,
     noise_power=1e-13,
-    candidate_pool=16,
+    candidate_pool=24,
 ) -> Schedule:
     """Graph-free Algorithm 2 (see module docstring for the equivalence).
+
+    ``candidate_pool`` bounds the per-round enumeration to the pool of
+    strongest devices; the batched rate engine scores all C(pool, K)
+    candidates in one call, so pools of 24-64 are cheap (the seed's
+    per-subset loop capped practical pools at ~16).
 
     With power_mode="mapel" the subset *search* runs at max power and MAPEL
     refines only the selected groups (two-stage; a MAPEL solve per candidate
@@ -273,7 +311,7 @@ def lazy_greedy_schedule(
         for t in sorted(remaining):
             val, sub = _best_subset_for_round(
                 t, avail, gains_tm, weights_m, k, search_fn, noise_power,
-                candidate_pool,
+                candidate_pool, pmax,
             )
             if val > best[0]:
                 best = (val, sub, t)
@@ -297,10 +335,14 @@ def brute_force_schedule(
     power_fn = make_power_fn(power_mode, pmax, noise_power)
     num_rounds, num_devices = gains_tm.shape
     subsets = list(itertools.combinations(range(num_devices), k))
+    subs_vk = np.array(subsets, dtype=np.intp).reshape(len(subsets), k)
     vals = {
-        (s, t): group_weighted_rate(s, t, gains_tm, weights_m, power_fn, noise_power)[0]
+        (s, t): v
         for t in range(num_rounds)
-        for s in subsets
+        for s, v in zip(
+            subsets,
+            score_subsets(subs_vk, t, gains_tm, weights_m, power_fn, noise_power),
+        )
     }
     best_total, best_assign = -np.inf, None
 
@@ -342,10 +384,18 @@ def random_schedule(
 def round_robin_schedule(
     gains_tm, weights_m, k, *, power_mode="max", pmax=0.01, noise_power=1e-13
 ) -> Schedule:
-    """Round robin: fixed device order, K per round (ref [6] policy)."""
+    """Round robin: fixed device order, K per round (ref [6] policy).
+
+    When T*K > M the tail rounds get the leftover devices (possibly none)
+    instead of emitting out-of-range device ids — C1 still holds and every
+    id stays < num_devices.
+    """
     power_fn = make_power_fn(power_mode, pmax, noise_power)
-    num_rounds = gains_tm.shape[0]
-    rounds = [tuple(range(t * k, (t + 1) * k)) for t in range(num_rounds)]
+    num_rounds, num_devices = gains_tm.shape
+    rounds = [
+        tuple(range(min(t * k, num_devices), min((t + 1) * k, num_devices)))
+        for t in range(num_rounds)
+    ]
     return _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, "round-robin")
 
 

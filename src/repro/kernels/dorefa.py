@@ -31,8 +31,10 @@ def _levels(bits: int) -> float:
 
 def _quantize_kernel(x_ref, scale_ref, o_ref, *, a: float):
     x = x_ref[...].astype(jnp.float32)
-    inv = 1.0 / jnp.maximum(scale_ref[0], 1e-12)
-    xn = jnp.clip(x * inv, -1.0, 1.0)
+    # Divide (not multiply-by-reciprocal): the reciprocal is 1 ulp off the
+    # oracle's x / scale, which flips round() at exact .5 boundaries for
+    # bits >= 16 (caught by test_pack_unpack_roundtrip[16]).
+    xn = jnp.clip(x / jnp.maximum(scale_ref[0], 1e-12), -1.0, 1.0)
     # round-half-away-from-zero == jnp.round (banker's) differences only at
     # exact .5 of representable values; we match jnp.round for oracle parity.
     o_ref[...] = jnp.round(a * xn).astype(jnp.int32)

@@ -18,6 +18,7 @@ from repro.kernels import dorefa
 from repro.kernels.aggregate import weighted_aggregate_pallas
 from repro.kernels.dorefa import BLOCK_ROWS, LANE
 from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.sic_rates import sic_weighted_rates_pallas
 
 _TILE = BLOCK_ROWS * LANE
 
@@ -90,6 +91,29 @@ def weighted_aggregate(
     return ref.weighted_aggregate_ref(
         codes.reshape(k, rows * lane), scales, weights, bits
     ).reshape(rows, lane)
+
+
+@functools.partial(jax.jit, static_argnames=("noise_power", "use_pallas"))
+def sic_weighted_rates(
+    powers_vk: jax.Array,
+    gains_vk: jax.Array,
+    weights_vk: jax.Array,
+    noise_power: float,
+    *,
+    use_pallas: bool = False,
+):
+    """Batched NOMA SIC group scoring: (V, K) rows -> (V,) weighted rates.
+
+    The scheduler-side (control-plane) engine is ``repro.core.rates``; this
+    is the accelerator mirror for scoring huge candidate batches on device
+    (use_pallas selects the comparison-matrix Mosaic kernel, interpret mode
+    on CPU).
+    """
+    if use_pallas:
+        return sic_weighted_rates_pallas(
+            powers_vk, gains_vk, weights_vk, noise_power
+        )
+    return ref.sic_weighted_rates_ref(powers_vk, gains_vk, weights_vk, noise_power)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_s"))

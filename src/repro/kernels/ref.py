@@ -50,3 +50,21 @@ def flash_decode_ref(q, k, v, valid_len):
     s = jnp.where(pos[None, None, None, :] < valid_len, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def sic_weighted_rates_ref(powers_vk, gains_vk, weights_vk, noise_power):
+    """Batched SIC weighted sum rate oracle: (V, K) -> (V,).
+
+    Sort + suffix-sum formulation (mirrors repro.core.rates): decode in
+    descending receive-power order, each sorted position's interference is
+    the suffix sum of receive powers decoded after it.  jnp.argsort is
+    stable, so ties break by lower input index — same order as the numpy
+    engine and the Pallas comparison-matrix kernel.
+    """
+    rx = (powers_vk * gains_vk * gains_vk).astype(jnp.float32)
+    order = jnp.argsort(-rx, axis=-1)
+    rx_s = jnp.take_along_axis(rx, order, axis=-1)
+    w_s = jnp.take_along_axis(weights_vk.astype(jnp.float32), order, axis=-1)
+    suffix = jnp.cumsum(rx_s[..., ::-1], axis=-1)[..., ::-1]
+    tail = suffix - rx_s
+    return jnp.sum(w_s * jnp.log2(1.0 + rx_s / (tail + noise_power)), axis=-1)

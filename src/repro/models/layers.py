@@ -293,12 +293,26 @@ def embedding_schema(vocab: int, d: int, *, tie: bool):
     return sch
 
 
+@jax.custom_jvp
+def _grad_safe_barrier(x):
+    # optimization_barrier has no differentiation rule on this JAX version;
+    # the barrier only pins XLA scheduling on the primal, so the tangent
+    # passes straight through (identity JVP, transposable for reverse mode).
+    return jax.lax.optimization_barrier(x)
+
+
+@_grad_safe_barrier.defjvp
+def _grad_safe_barrier_jvp(primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return jax.lax.optimization_barrier(x), dx
+
+
 def embed(p, tokens):
     # optimization_barrier pins the table convert BEFORE the gather: without
     # it XLA converts after the gather and the vocab-shard partial-sum
     # all-reduce of the (B, S, D) activations runs in fp32 (2x bytes;
     # EXPERIMENTS.md §Perf pair B).
-    table = jax.lax.optimization_barrier(p["tokens"].astype(COMPUTE_DTYPE))
+    table = _grad_safe_barrier(p["tokens"].astype(COMPUTE_DTYPE))
     return constrain(table[tokens], "residual")
 
 

@@ -1,0 +1,129 @@
+"""Seeded fallback property-testing shim for offline containers.
+
+This container has no network pip index and no ``hypothesis`` wheel baked
+in, so the tier-1 suite cannot import it.  Test modules fall back to this
+shim::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propcheck import given, settings, strategies as st
+
+Semantics (deliberately tiny, covering only what the suite uses):
+
+ - ``strategies.integers/floats/sampled_from/booleans`` draw from a
+   ``numpy.random.Generator`` seeded deterministically from the test's
+   qualified name, so runs are reproducible without example databases.
+ - ``@given(*strategies)`` maps strategies onto the *last* len(strategies)
+   parameters (hypothesis fills rightmost-first), runs ``max_examples``
+   drawn examples sequentially, and re-raises the first failure with the
+   failing example attached to the assertion message.
+ - ``@settings(max_examples=..., deadline=...)`` only honours
+   ``max_examples``; deadlines are meaningless for a sequential loop.
+
+No shrinking, no example database — failures print the drawn arguments so
+they can be replayed by hand.
+"""
+from __future__ import annotations
+
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw, label):
+        self._draw = draw
+        self._label = label
+
+    def __repr__(self):
+        return f"_propcheck.{self._label}"
+
+
+def _integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def _floats(min_value, max_value):
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        f"floats({min_value}, {max_value})",
+    )
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(
+        lambda rng: elements[int(rng.integers(len(elements)))],
+        f"sampled_from({elements!r})",
+    )
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)), "booleans()")
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    sampled_from=_sampled_from,
+    booleans=_booleans,
+)
+
+
+class settings:
+    """Decorator mirroring hypothesis.settings; keeps only max_examples."""
+
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._propcheck_settings = self
+        return fn
+
+
+def given(*strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        if len(strats) > len(params):
+            raise TypeError(
+                f"@given got {len(strats)} strategies for {len(params)} "
+                f"parameters of {fn.__name__}"
+            )
+        passthrough = params[: len(params) - len(strats)]
+
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_propcheck_settings", None)
+            n = cfg.max_examples if cfg else DEFAULT_MAX_EXAMPLES
+            rng = np.random.default_rng(
+                zlib.adler32(fn.__qualname__.encode("utf-8"))
+            )
+            for example in range(n):
+                drawn = [s._draw(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {example} with "
+                        f"drawn arguments {tuple(drawn)!r}: {exc!r}"
+                    ) from exc
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        # Carry @settings applied *below* @given, and hide the drawn
+        # parameters from pytest's fixture resolution.
+        wrapper.__dict__.update(fn.__dict__)
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        return wrapper
+
+    return deco

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: seeded numpy-backed shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import noma
 

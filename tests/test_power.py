@@ -1,7 +1,10 @@
 """MAPEL power allocation (paper §III-C) vs grid oracle + structure tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: seeded numpy-backed shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import power
 

@@ -1,0 +1,194 @@
+"""Batched SIC rate engine (repro.core.rates) and its accelerator mirrors."""
+import itertools
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: seeded numpy-backed shim
+    from _propcheck import given, settings, strategies as st
+
+from repro.core import power, rates, scheduling
+
+NOISE = 1.6e-14
+PMAX = 0.01
+
+
+def _batch(v, k, seed, pmax=PMAX):
+    rng = np.random.default_rng(seed)
+    gains = np.abs(rng.normal(1e-6, 5e-7, (v, k))) + 1e-8
+    powers = rng.uniform(0.0, pmax, (v, k))
+    weights = rng.dirichlet(np.ones(k), size=v)
+    return powers, gains, weights
+
+
+def _paper_reference_row(p, g, w, noise):
+    """Straight-from-the-paper scalar SIC chain (Eq. 2-4), no vectorization:
+    decode descending receive power, interference = undecoded tail."""
+    rx = p * g**2
+    order = sorted(range(len(rx)), key=lambda i: (-rx[i], i))
+    total = 0.0
+    for pos, i in enumerate(order):
+        tail = sum(rx[j] for j in order[pos + 1 :])
+        total += w[i] * np.log2(1.0 + rx[i] / (tail + noise))
+    return total
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_batched_matches_paper_reference(k, v, seed):
+    p, g, w = _batch(v, k, seed)
+    got = rates.batched_weighted_rates(p, g, w, NOISE)
+    want = [_paper_reference_row(p[i], g[i], w[i], NOISE) for i in range(v)]
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 32), st.integers(0, 2**31 - 1))
+def test_batched_matches_scalar_weighted_rate(k, v, seed):
+    """Elementwise agreement with the public scalar API (power.weighted_rate)."""
+    p, g, w = _batch(v, k, seed)
+    got = rates.batched_weighted_rates(p, g, w, NOISE)
+    for i in range(v):
+        assert got[i] == pytest.approx(
+            power.weighted_rate(p[i], g[i], w[i], NOISE), rel=1e-12
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 4), st.integers(1, 16), st.integers(0, 2**31 - 1))
+def test_permutation_invariance(k, v, seed):
+    """The weighted sum rate of a group does not depend on input device order."""
+    p, g, w = _batch(v, k, seed)
+    base = rates.batched_weighted_rates(p, g, w, NOISE)
+    rng = np.random.default_rng(seed + 1)
+    perm = rng.permutation(k)
+    shuffled = rates.batched_weighted_rates(
+        p[:, perm], g[:, perm], w[:, perm], NOISE
+    )
+    np.testing.assert_allclose(shuffled, base, rtol=1e-12)
+
+
+def test_sic_rates_matches_seed_formula():
+    """sic_rates on a single row reproduces the seed's per-group _rates."""
+    p, g, w = _batch(8, 3, 7)
+    for i in range(8):
+        rx = p[i] * g[i] ** 2
+        order = np.argsort(-rx)
+        rx_s = rx[order]
+        tail = np.concatenate([np.cumsum(rx_s[::-1])[::-1][1:], [0.0]])
+        want = np.zeros(3)
+        want[order] = np.log2(1.0 + rx_s / (tail + NOISE))
+        np.testing.assert_allclose(rates.sic_rates(p[i], g[i], NOISE), want,
+                                   rtol=1e-12)
+
+
+def test_jax_paths_match_numpy_engine():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels import ops
+
+    p, g, w = _batch(600, 3, 3)  # > one BLOCK_V tile for the pallas grid
+    want = rates.batched_weighted_rates(p, g, w, NOISE)
+    got_ref = np.asarray(
+        ops.sic_weighted_rates(jnp.asarray(p), jnp.asarray(g), jnp.asarray(w), NOISE)
+    )
+    got_pallas = np.asarray(
+        ops.sic_weighted_rates(
+            jnp.asarray(p), jnp.asarray(g), jnp.asarray(w), NOISE, use_pallas=True
+        )
+    )
+    # float32 device math vs float64 host engine
+    np.testing.assert_allclose(got_ref, want, rtol=2e-4)
+    np.testing.assert_allclose(got_pallas, want, rtol=2e-4)
+    np.testing.assert_allclose(got_pallas, got_ref, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# Scheduler equivalence: batched engine vs the seed's per-subset Python loop
+# --------------------------------------------------------------------------
+
+def _seed_lazy_greedy(gains_tm, weights_m, k, *, pmax=PMAX, noise_power=NOISE,
+                      candidate_pool=16):
+    """The seed implementation, verbatim: one group_weighted_rate call per
+    itertools.combinations subset per round (kept here as the ground truth
+    the batched scheduler must reproduce)."""
+    search_fn = scheduling.make_power_fn("max", pmax, noise_power)
+    num_rounds, num_devices = gains_tm.shape
+    avail = set(range(num_devices))
+    remaining = set(range(num_rounds))
+    rounds = [()] * num_rounds
+    while remaining and len(avail) > 0:
+        best = (-np.inf, None, None)
+        for t in sorted(remaining):
+            av = np.asarray(sorted(avail))
+            if len(av) > candidate_pool:
+                g = gains_tm[t, av]
+                solo = weights_m[av] * np.log2(1.0 + (pmax * g**2) / noise_power)
+                keep = av[np.argsort(-solo)[:candidate_pool]]
+            else:
+                keep = av
+            best_val, best_sub = -np.inf, None
+            for subset in itertools.combinations(
+                sorted(keep.tolist()), min(k, len(keep))
+            ):
+                val, _, _ = scheduling.group_weighted_rate(
+                    subset, t, gains_tm, weights_m, search_fn, noise_power
+                )
+                if val > best_val:
+                    best_val, best_sub = val, subset
+            if best_val > best[0]:
+                best = (best_val, best_sub, t)
+        _, subset, t = best
+        if subset is None:
+            break
+        rounds[t] = subset
+        avail -= set(subset)
+        remaining.discard(t)
+    return list(map(tuple, rounds))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(5, 10), st.integers(1, 3), st.integers(1, 3),
+       st.integers(0, 9999))
+def test_batched_greedy_equals_seed_loop(m, k, t, seed):
+    if m < k * t:
+        return
+    rng = np.random.default_rng(seed)
+    gains = np.abs(rng.normal(1e-6, 5e-7, (t, m))) + 1e-8
+    w = rng.dirichlet(np.ones(m))
+    want = _seed_lazy_greedy(gains, w, k)
+    got = scheduling.lazy_greedy_schedule(gains, w, k, noise_power=NOISE)
+    assert got.rounds == want
+
+
+def test_batched_greedy_equals_seed_loop_with_candidate_pool():
+    """Exercise the proxy-pool path (M > candidate_pool) too."""
+    rng = np.random.default_rng(42)
+    gains = np.abs(rng.normal(1e-6, 5e-7, (4, 24))) + 1e-8
+    w = rng.dirichlet(np.ones(24))
+    want = _seed_lazy_greedy(gains, w, 3, candidate_pool=8)
+    got = scheduling.lazy_greedy_schedule(
+        gains, w, 3, noise_power=NOISE, candidate_pool=8
+    )
+    assert got.rounds == want
+    assert got.validate(24, 3)
+
+
+def test_candidate_pool_proxy_respects_pmax():
+    """Seed bug: the pool ranking hardcoded pmax=0.01. With a large power
+    budget the weighted solo-rate ranking flips (log concavity), so the pool
+    must be ranked at the caller's pmax to keep the right device."""
+    noise = 1.0
+    gains = np.array([[10.0, 1.0]])       # device 0: strong; device 1: weak
+    weights = np.array([0.2, 1.0])        # ...but device 1 carries the weight
+    # pmax=100: w1*log2(1 + 100*1) = 6.66 > w0*log2(1 + 100*100) = 2.66
+    sched = scheduling.lazy_greedy_schedule(
+        gains, weights, 1, pmax=100.0, noise_power=noise, candidate_pool=1
+    )
+    assert sched.rounds == [(1,)]
+    # pmax=0.01 keeps the seed's ranking (device 0 wins)
+    sched_small = scheduling.lazy_greedy_schedule(
+        gains, weights, 1, pmax=0.01, noise_power=noise, candidate_pool=1
+    )
+    assert sched_small.rounds == [(0,)]

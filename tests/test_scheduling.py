@@ -3,7 +3,10 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: seeded numpy-backed shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import scheduling
 
@@ -81,6 +84,16 @@ def test_all_schedulers_respect_constraints():
     ]:
         assert sched.validate(12, 3)
         assert len(sched.rounds) == 3
+
+
+def test_round_robin_more_rounds_than_devices():
+    """Regression: T*K > M used to emit device ids >= M and crash the gains
+    gather; tail rounds must instead get the (possibly empty) leftovers."""
+    gains, w = _instance(5, 4, 7)  # M=5 devices, T=4 rounds, K=2 -> T*K > M
+    sched = scheduling.round_robin_schedule(gains, w, 2, noise_power=NOISE)
+    assert sched.validate(5, 2)
+    assert sched.rounds == [(0, 1), (2, 3), (4,), ()]
+    assert sched.scheduled_devices() == set(range(5))
 
 
 def test_greedy_beats_random_on_average():

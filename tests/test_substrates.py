@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: seeded numpy-backed shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.core import channel
