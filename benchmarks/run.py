@@ -3,10 +3,16 @@
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+The scheduling suite additionally returns backend-sweep records that are
+persisted to ``BENCH_scheduling.json`` at the repo root (M sweep x
+numpy/jax backend, wall-clock per schedule) so the scheduler perf
+trajectory is tracked from PR to PR.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import traceback
 
@@ -35,7 +41,16 @@ def main() -> None:
             continue
         print(f"# === {name} ({module}) ===", flush=True)
         try:
-            importlib.import_module(module).main(fast=args.fast)
+            result = importlib.import_module(module).main(fast=args.fast)
+            if name == "scheduling" and isinstance(result, dict):
+                # --fast runs a single small-M case; don't clobber the
+                # tracked full-sweep record with it.
+                suffix = "_fast" if args.fast else ""
+                out = pathlib.Path(__file__).resolve().parent.parent / (
+                    f"BENCH_scheduling{suffix}.json"
+                )
+                out.write_text(json.dumps(result, indent=2) + "\n")
+                print(f"# wrote {out}", flush=True)
         except Exception:
             failures.append(name)
             traceback.print_exc()

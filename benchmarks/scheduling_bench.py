@@ -1,6 +1,8 @@
 """Algorithm 2 scaling: literal graph vs lazy column generation, the batched
-SIC rate engine vs the seed's per-subset Python loop, and the greedy's
-optimality gap vs brute force (paper §III)."""
+SIC rate engine vs the seed's per-subset Python loop, the greedy's optimality
+gap vs brute force (paper §III), and the numpy-vs-jax backend sweep whose
+records ``benchmarks/run.py`` persists to ``BENCH_scheduling.json`` so the
+scheduler perf trajectory is tracked PR over PR."""
 from __future__ import annotations
 
 import itertools
@@ -57,6 +59,75 @@ def _candidate_scoring(fast: bool):
     )
 
 
+def _schedule_once(backend, gains, w, k, pool):
+    if backend == "jax":
+        # untimed warm-up: each (T, V, K) case shape compiles greedy_step
+        # once, and compile latency would otherwise pollute the tracked
+        # per-schedule wall-clock
+        scheduling.lazy_greedy_schedule(
+            gains, w, k, noise_power=NOISE, candidate_pool=pool, backend=backend
+        )
+    t0 = time.perf_counter()
+    s = scheduling.lazy_greedy_schedule(
+        gains, w, k, noise_power=NOISE, candidate_pool=pool, backend=backend
+    )
+    return time.perf_counter() - t0, s
+
+
+def backend_sweep(fast: bool):
+    """M sweep x backend wall-clock for the lazy greedy (BENCH_scheduling.json).
+
+    The numpy path re-enumerates C(pool, K) subsets per (step, round) in
+    Python; the jax path scores the whole (T, V, K) vertex tensor in one
+    jitted call per step.  M=3000 is jax-only — the host path is impractical
+    there, which is the point of the device-resident backend.
+    """
+    records = []
+    cases = (
+        [(100, 10, 3, 32, ("numpy", "jax"))]
+        if fast
+        else [
+            (300, 35, 3, 64, ("numpy", "jax")),
+            (1000, 50, 3, 64, ("numpy", "jax")),
+            (3000, 50, 3, 64, ("jax",)),
+        ]
+    )
+    for m, t, k, pool, backends in cases:
+        gains, w = _instance(m, t, seed=0)
+        secs = {}
+        for backend in backends:
+            dt, s = _schedule_once(backend, gains, w, k, pool)
+            s.validate(m, k)
+            secs[backend] = dt
+            records.append({
+                "m": m, "t": t, "k": k, "pool": pool, "backend": backend,
+                "seconds": round(dt, 4),
+                "weighted_sum_rate": float(s.weighted_sum_rate),
+            })
+            emit(f"sched.lazy_{backend}_M{m}_T{t}_pool{pool}", dt * 1e6,
+                 f"wsum {s.weighted_sum_rate:.3f}")
+        if "numpy" in secs and "jax" in secs:
+            emit(f"sched.backend_speedup_M{m}", 0.0,
+                 f"{secs['numpy'] / secs['jax']:.1f}x jax over numpy")
+    # equality spot check on an instance small enough for both paths
+    g_eq, w_eq = _instance(48, 6, seed=1)
+    a = scheduling.lazy_greedy_schedule(
+        g_eq, w_eq, 3, noise_power=NOISE, candidate_pool=16
+    )
+    b = scheduling.lazy_greedy_schedule(
+        g_eq, w_eq, 3, noise_power=NOISE, candidate_pool=16, backend="jax"
+    )
+    identical = bool(
+        a.rounds == b.rounds and a.weighted_sum_rate == b.weighted_sum_rate
+    )
+    # recorded, not asserted: a ULP tie-flip must not abort the perf-record
+    # write — bit equality is pinned by tests/test_scheduling_edges.py
+    emit("sched.backend_equality_M48", 0.0,
+         "identical" if identical else "DIVERGED (see test suite)")
+    return {"suite": "scheduling", "fast": fast,
+            "backends_identical_M48": identical, "records": records}
+
+
 def main(fast: bool = False):
     # literal vs lazy at small M (identical outputs; timing gap)
     gains, w = _instance(8, 3)
@@ -101,6 +172,10 @@ def main(fast: bool = False):
         us = (time.perf_counter() - t0) * 1e6
         emit(f"sched.lazy_M{m}_pool{pool}", us,
              f"wsum {sp.weighted_sum_rate:.3f}")
+
+    # numpy vs jax device-resident greedy; records land in
+    # BENCH_scheduling.json via benchmarks/run.py
+    return backend_sweep(fast)
 
 
 if __name__ == "__main__":

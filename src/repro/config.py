@@ -163,6 +163,7 @@ class FLConfig:
     batch_size: int = 10             # B
     local_epochs: int = 1
     scheduler: str = "lazy-gwmin"    # lazy-gwmin | literal-gwmin | random | round-robin | proportional-fair
+    scheduler_backend: str = "numpy"  # numpy | jax (device-resident greedy, M >> 300)
     power_mode: str = "mapel"        # mapel | max
     compression: str = "adaptive"    # adaptive | none
     paper_exact_range: bool = False  # DoReFa fixed [-1,1] range (Eq. 7)

@@ -7,9 +7,13 @@ Faithful paper-scale FedAvg over the simulated NOMA cell:
        over the whole horizon, or a per-round baseline policy).
     3. Each scheduled device runs local SGD on its own non-iid shard and
        produces a model delta.
-    4. The NOMA rate of each device (SIC + its allocated power) sets the
-       bit budget c_k = R_k * B * t_slot; the delta is DoReFa-quantized to
-       b_k = floor(32 / r_k) bits (paper §II-B).
+    4. The uplink rate of each device sets the bit budget c_k = R_k * B * t;
+       the delta is DoReFa-quantized to b_k = floor(32 / r_k) bits (paper
+       §II-B).  Under NOMA that is the SIC rate over the shared slot; under
+       TDMA each device gets its interference-free rate over its own
+       sub-slot (adaptive compression applies to both uplinks — comparing a
+       compressed NOMA run against an uncompressed TDMA run would bias the
+       Fig. 5 comparison).
     5. PS aggregates: theta^{t+1} = theta^t + sum_k w_k * dq(delta_k),
        w_k = |D_k| / sum_selected |D_k| (weighted FedAvg; see DESIGN.md §6
        on the paper's line-10 notation).
@@ -119,7 +123,9 @@ def make_schedule(
     )
     k = cfg.group_size
     if cfg.scheduler == "lazy-gwmin":
-        return scheduling.lazy_greedy_schedule(gains_tm, weights_m, k, **kw)
+        return scheduling.lazy_greedy_schedule(
+            gains_tm, weights_m, k, backend=cfg.scheduler_backend, **kw
+        )
     if cfg.scheduler == "literal-gwmin":
         return scheduling.literal_graph_schedule(gains_tm, weights_m, k, **kw)
     if cfg.scheduler == "random":
@@ -206,7 +212,11 @@ def run_federated_learning(
         for j, d in enumerate(devs):
             idx = shards[d]
             delta = local_update(params, dataset.x_train[idx], dataset.y_train[idx], cfg)
-            if cfg.compression == "adaptive" and uplink == "noma":
+            if cfg.compression == "adaptive":
+                # NOMA: SIC rate over the shared slot; TDMA: interference-free
+                # rate over the device's own sub-slot. Both budgets are in
+                # ``budgets`` — quantizing only the NOMA uplink would bias
+                # the Fig. 5 comparison in TDMA's favour.
                 b = int(qlib.adaptive_bits(payload, budgets[j]))
                 delta = compression.encode_decode_tree(
                     delta, b, paper_exact=cfg.paper_exact_range
@@ -219,11 +229,15 @@ def run_federated_learning(
             deltas.append(delta)
             agg_w.append(sizes[d])
 
-        agg_w = np.asarray(agg_w) / max(sum(agg_w), 1.0)
-        update = jax.tree_util.tree_map(
-            lambda *ds: sum(w * d for w, d in zip(agg_w, ds)), *deltas
-        )
-        params = jax.tree_util.tree_map(lambda p, u: p + u, params, update)
+        if deltas:
+            agg_w = np.asarray(agg_w) / max(sum(agg_w), 1.0)
+            update = jax.tree_util.tree_map(
+                lambda *ds: sum(w * d for w, d in zip(agg_w, ds)), *deltas
+            )
+            params = jax.tree_util.tree_map(lambda p, u: p + u, params, update)
+        # else: empty round (T*K > M schedules legitimately produce empty
+        # tail groups) — no uplink, no aggregation; the wall clock still
+        # advances and the round is still logged below.
 
         t_wall += round_time
         acc = float(acc_fn(params, x_test, y_test)) if t % eval_every == 0 else logs[-1].test_accuracy

@@ -15,10 +15,14 @@ are broken by input index (stable sort), matching the accelerator path in
 ``repro.kernels.sic_rates`` bit-for-bit so numpy and Pallas agree on the
 argmax subset.
 
-Accelerator path: ``repro.kernels.ops.sic_weighted_rates`` (jnp/XLA with a
-Pallas kernel behind ``use_pallas=True``).  The numpy path here is the
-control-plane default — scheduling batches are O(10^4) vertices and the
-engine is called from inside Python greedy loops.
+Accelerator path: ``repro.core.rates_jax`` is the jnp mirror of this module
+(same stable tie-break, same shifted-suffix-sum interference tail) used by
+the device-resident MWIS greedy (``scheduling.lazy_greedy_schedule``
+``backend="jax"``) to score a whole (T, V, K) vertex tensor per greedy step,
+and by ``repro.kernels.ops.sic_weighted_rates`` (with a Pallas kernel behind
+``use_pallas=True``).  The numpy path here is the control-plane default —
+scheduling batches are O(10^4) vertices and the engine is called from inside
+Python greedy loops.
 """
 from __future__ import annotations
 

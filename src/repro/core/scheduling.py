@@ -27,6 +27,20 @@ sum_{u in J(v)} w(u)/(beta+1) <= beta*w(v)/(beta+1) + w(v)/(beta+1) = w(v)).
 So Algorithm 2 == repeatedly take the max-weight (subset, round) among unused
 devices and remaining rounds. ``tests/test_scheduling.py`` checks the two
 produce identical schedules on instances where the literal graph fits.
+
+Backends: ``lazy_greedy_schedule(backend="numpy")`` (default) walks rounds in
+Python and scores each round's candidate batch with the numpy engine;
+``backend="jax"`` runs the whole per-step argmax on device
+(``repro.core.rates_jax.greedy_step``): the C(pool, K) subset enumeration is
+built once as *positions* into a per-round candidate pool, and every greedy
+step is a single jitted call that re-masks availability, re-ranks the pools,
+scores the full (T, V, K) vertex tensor, and returns the argmax vertex.  The
+two backends produce bit-identical schedules (same stable tie-breaking:
+earliest round, lexicographically-first subset, ties in the pool ranking to
+the lower device id); leftover tail groups smaller than K fall back to the
+host path.  Power refinement with ``power_mode="mapel"`` is batched over all
+selected groups at the end (``power.mapel_batched``) instead of solved
+round-by-round.
 """
 from __future__ import annotations
 
@@ -49,14 +63,33 @@ PowerFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
 # --------------------------------------------------------------------------
 
 def make_power_fn(mode: str, pmax: float, noise_power: float) -> PowerFn:
-    """'max' -> everyone at p^max; 'mapel' -> optimal MLFP allocation."""
+    """'max' -> everyone at p^max; 'mapel' -> optimal MLFP allocation.
+
+    Both modes carry a ``batched`` attribute ((V, K) -> (V, K)) so candidate
+    scoring and schedule finalization run one grouped call instead of a
+    Python loop per group; MAPEL's is the lockstep polyblock
+    (``power.mapel_batched``), which reproduces the sequential solver
+    group-for-group.
+    """
     if mode == "max":
         fn = lambda g, w: np.full(len(g), pmax)
         fn.batched = lambda g_vk, w_vk: np.full(np.shape(g_vk), pmax)
         return fn
     if mode == "mapel":
-        return lambda g, w: power_lib.mapel(g, w, pmax, noise_power, eps=1e-3).powers
+        fn = lambda g, w: power_lib.mapel(g, w, pmax, noise_power, eps=1e-3).powers
+        fn.batched = lambda g_vk, w_vk: power_lib.mapel_batched(
+            g_vk, w_vk, pmax, noise_power, eps=1e-3
+        ).powers
+        return fn
     raise ValueError(f"unknown power mode {mode!r}")
+
+
+def _solo_proxy(gains, weights, pmax: float, noise_power: float) -> np.ndarray:
+    """Pool-ranking proxy: weighted interference-free rate of each device
+    alone.  Shared by the numpy per-round pool and the jax backend's
+    precomputed (T, M) table — the backends' bit-equality rests on ranking
+    from identical float64 values, so there is exactly one formula."""
+    return weights * np.log2(1.0 + (pmax * gains**2) / noise_power)
 
 
 def _batched_powers(power_fn: PowerFn, gains_vk, weights_vk) -> np.ndarray:
@@ -141,14 +174,36 @@ class Schedule:
 
 
 def _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, method):
-    powers, rates, total = [], [], 0.0
+    """Powers/rates/weighted-sum for a complete schedule.
+
+    Groups are batched by size and handed to the allocator in one call per
+    size (for MAPEL this is the batched polyblock refinement over all T
+    selected groups — the per-round loop it replaces solved each group
+    separately).  Tail groups smaller than K (T*K > M horizons) and empty
+    rounds batch among themselves.
+    """
+    num_rounds = len(rounds)
+    powers, rates = [None] * num_rounds, [None] * num_rounds
+    vals = np.zeros(num_rounds)
+    by_size = {}
     for t, grp in enumerate(rounds):
-        val, p, r = group_weighted_rate(
-            grp, t, gains_tm, weights_m, power_fn, noise_power
-        )
-        powers.append(p)
-        rates.append(r)
-        total += val
+        by_size.setdefault(len(grp), []).append(t)
+    for kk, ts in sorted(by_size.items()):
+        idx = np.array([rounds[t] for t in ts], dtype=np.intp).reshape(len(ts), kk)
+        g = gains_tm[np.asarray(ts, dtype=np.intp)[:, None], idx]
+        w = weights_m[idx]
+        if kk == 0:
+            p = np.zeros((len(ts), 0))
+        else:
+            p = _batched_powers(power_fn, g, w)
+        r = rates_lib.sic_rates(p, g, noise_power)
+        for row, t in enumerate(ts):
+            powers[t] = p[row]
+            rates[t] = r[row]
+            vals[t] = float(np.sum(w[row] * r[row]))
+    total = 0.0
+    for t in range(num_rounds):    # accumulate in round order (reproducible)
+        total += float(vals[t])
     return Schedule(list(map(tuple, rounds)), powers, rates, total, method)
 
 
@@ -260,10 +315,10 @@ def _best_subset_for_round(
     """
     avail = np.asarray(sorted(avail))
     if len(avail) > candidate_pool:
-        # Proxy: weighted interference-free rate of each device alone.
-        g = gains_tm[t, avail]
-        solo = weights_m[avail] * np.log2(1.0 + (pmax * g**2) / noise_power)
-        keep = avail[np.argsort(-solo)[:candidate_pool]]
+        # Stable sort so proxy ties keep the lower device id — the rule the
+        # jax backend's masked ranking uses, keeping the backends identical.
+        solo = _solo_proxy(gains_tm[t, avail], weights_m[avail], pmax, noise_power)
+        keep = avail[np.argsort(-solo, kind="stable")[:candidate_pool]]
     else:
         keep = avail
     kk = min(k, len(keep))
@@ -277,34 +332,23 @@ def _best_subset_for_round(
     return float(vals[i_best]), tuple(subs_vk[i_best].tolist())
 
 
-def lazy_greedy_schedule(
-    gains_tm,
-    weights_m,
-    k,
-    *,
-    power_mode="max",
-    pmax=0.01,
-    noise_power=1e-13,
-    candidate_pool=24,
-) -> Schedule:
-    """Graph-free Algorithm 2 (see module docstring for the equivalence).
+def _greedy_rounds_numpy(
+    gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax,
+    *, rounds=None, avail=None, remaining=None,
+):
+    """Host-path greedy selection loop (also the jax backend's tail path).
 
-    ``candidate_pool`` bounds the per-round enumeration to the pool of
-    strongest devices; the batched rate engine scores all C(pool, K)
-    candidates in one call, so pools of 24-64 are cheap (the seed's
-    per-subset loop capped practical pools at ~16).
-
-    With power_mode="mapel" the subset *search* runs at max power and MAPEL
-    refines only the selected groups (two-stage; a MAPEL solve per candidate
-    subset — the literal paper procedure — is O(C(pool,K)) solves per round
-    and only reorders near-ties). literal_graph_schedule keeps the paper's
-    exact per-vertex power allocation."""
-    search_fn = make_power_fn("max", pmax, noise_power)
-    power_fn = make_power_fn(power_mode, pmax, noise_power)
+    Mutates/returns ``rounds`` (list[T] of tuples); ``avail``/``remaining``
+    default to the full device/round sets so the jax driver can hand over
+    mid-schedule state when fewer than K devices remain.
+    """
     num_rounds, num_devices = gains_tm.shape
-    avail = set(range(num_devices))
-    remaining = set(range(num_rounds))
-    rounds = [()] * num_rounds
+    if rounds is None:
+        rounds = [()] * num_rounds
+    if avail is None:
+        avail = set(range(num_devices))
+    if remaining is None:
+        remaining = set(range(num_rounds))
     while remaining and len(avail) > 0:
         # max-weight vertex across all remaining rounds
         best = (-np.inf, None, None)
@@ -321,6 +365,108 @@ def lazy_greedy_schedule(
         rounds[t] = subset
         avail -= set(subset)
         remaining.discard(t)
+    return rounds
+
+
+def _greedy_rounds_jax(
+    gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax
+):
+    """Device-path greedy selection: one jitted argmax call per step.
+
+    The C(pool, K) enumeration is built once as positions into the
+    per-round candidate pool; each step ``rates_jax.greedy_step`` re-masks
+    availability and scores the whole (T, V, K) vertex tensor on device.
+    Runs under x64 so scores (and therefore argmax tie-breaking) line up
+    with the float64 host path.  Once fewer than K devices remain (T*K > M
+    horizons), the host loop finishes the leftover smaller groups — the
+    enumeration is fixed-K, and those tail steps are O(C(K-1, kk)) cheap.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import rates_jax
+
+    num_rounds, num_devices = gains_tm.shape
+    pool = int(min(candidate_pool, num_devices))
+    kk = min(k, pool)
+    subs_pos = np.array(
+        list(itertools.combinations(range(pool), kk)), dtype=np.int32
+    ).reshape(-1, kk)
+    # Pool-ranking proxy, computed with the *host* engine so both backends
+    # rank candidate pools from identical float64 values.
+    solo_tm = _solo_proxy(gains_tm, weights_m[None, :], pmax, noise_power)
+    rounds = [()] * num_rounds
+    with jax.experimental.enable_x64():
+        jg = jnp.asarray(gains_tm, jnp.float64)
+        jw = jnp.asarray(weights_m, jnp.float64)
+        jsolo = jnp.asarray(solo_tm, jnp.float64)
+        jsubs = jnp.asarray(subs_pos)
+        avail = jnp.ones(num_devices, bool)
+        done = jnp.zeros(num_rounds, bool)
+        avail_count = num_devices
+        steps = 0
+        while steps < num_rounds and avail_count >= kk:
+            val, t_star, sub_ids, avail, done = rates_jax.greedy_step(
+                jg, jw, jsolo, jsubs, avail, done,
+                pool=pool, pmax=float(pmax), noise_power=float(noise_power),
+            )
+            if not bool(val > -jnp.inf):
+                break
+            rounds[int(t_star)] = tuple(int(d) for d in np.asarray(sub_ids))
+            avail_count -= kk
+            steps += 1
+        avail_np = np.asarray(avail)
+        done_np = np.asarray(done)
+        avail_host = set(np.flatnonzero(avail_np).tolist())
+        remaining_host = set(np.flatnonzero(~done_np).tolist())
+    if avail_host and remaining_host:
+        _greedy_rounds_numpy(
+            gains_tm, weights_m, k, search_fn, noise_power, candidate_pool,
+            pmax, rounds=rounds, avail=avail_host, remaining=remaining_host,
+        )
+    return rounds
+
+
+def lazy_greedy_schedule(
+    gains_tm,
+    weights_m,
+    k,
+    *,
+    power_mode="max",
+    pmax=0.01,
+    noise_power=1e-13,
+    candidate_pool=24,
+    backend="numpy",
+) -> Schedule:
+    """Graph-free Algorithm 2 (see module docstring for the equivalence).
+
+    ``candidate_pool`` bounds the per-round enumeration to the pool of
+    strongest devices; the batched rate engine scores all C(pool, K)
+    candidates in one call, so pools of 24-64 are cheap (the seed's
+    per-subset loop capped practical pools at ~16).
+
+    ``backend="jax"`` moves the per-step argmax itself onto the device path
+    (one jitted (T, V, K) scoring call per greedy step; see module
+    docstring) and produces bit-identical schedules; use it for M >> 300.
+
+    With power_mode="mapel" the subset *search* runs at max power and MAPEL
+    refines only the selected groups — batched over all T groups in one
+    ``power.mapel_batched`` call at finalization (a MAPEL solve per
+    candidate subset — the literal paper procedure — is O(C(pool,K)) solves
+    per round and only reorders near-ties). literal_graph_schedule keeps
+    the paper's exact per-vertex power allocation."""
+    search_fn = make_power_fn("max", pmax, noise_power)
+    power_fn = make_power_fn(power_mode, pmax, noise_power)
+    if backend == "numpy":
+        rounds = _greedy_rounds_numpy(
+            gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax
+        )
+    elif backend == "jax":
+        rounds = _greedy_rounds_jax(
+            gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax
+        )
+    else:
+        raise ValueError(f"unknown scheduling backend {backend!r}")
     return _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, "lazy-gwmin")
 
 
@@ -402,13 +548,21 @@ def round_robin_schedule(
 def proportional_fair_schedule(
     gains_tm, weights_m, k, *, power_mode="max", pmax=0.01, noise_power=1e-13
 ) -> Schedule:
-    """Per round, pick the K best unused devices by instantaneous gain."""
+    """Per round, pick the K best unused devices by instantaneous gain.
+
+    When every device has been used before the horizon ends (T*K > M) the
+    remaining rounds get empty groups, like round-robin's tail — the intp
+    dtype keeps the empty-``avail`` gather legal (a bare ``np.array([])`` is
+    float64 and rejects fancy indexing).
+    """
     power_fn = make_power_fn(power_mode, pmax, noise_power)
     num_rounds, num_devices = gains_tm.shape
     used = set()
     rounds = []
     for t in range(num_rounds):
-        avail = np.array([d for d in range(num_devices) if d not in used])
+        avail = np.array(
+            [d for d in range(num_devices) if d not in used], dtype=np.intp
+        )
         order = avail[np.argsort(-gains_tm[t, avail])]
         grp = tuple(order[:k].tolist())
         used |= set(grp)

@@ -107,7 +107,9 @@ def sic_weighted_rates(
     The scheduler-side (control-plane) engine is ``repro.core.rates``; this
     is the accelerator mirror for scoring huge candidate batches on device
     (use_pallas selects the comparison-matrix Mosaic kernel, interpret mode
-    on CPU).
+    on CPU; the default path is the shared jnp engine in
+    ``repro.core.rates_jax``, which also powers the device-resident MWIS
+    greedy in ``repro.core.scheduling`` at float64).
     """
     if use_pallas:
         return sic_weighted_rates_pallas(

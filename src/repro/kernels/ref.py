@@ -55,16 +55,18 @@ def flash_decode_ref(q, k, v, valid_len):
 def sic_weighted_rates_ref(powers_vk, gains_vk, weights_vk, noise_power):
     """Batched SIC weighted sum rate oracle: (V, K) -> (V,).
 
-    Sort + suffix-sum formulation (mirrors repro.core.rates): decode in
-    descending receive-power order, each sorted position's interference is
-    the suffix sum of receive powers decoded after it.  jnp.argsort is
-    stable, so ties break by lower input index — same order as the numpy
-    engine and the Pallas comparison-matrix kernel.
+    Delegates to ``repro.core.rates_jax`` — the single jnp SIC formulation
+    shared with the device-resident MWIS greedy — at the kernels' float32
+    working precision.  Decode order is descending receive power with ties
+    to the lower input index (stable argsort), the same order as the numpy
+    engine and the Pallas comparison-matrix kernel; the interference tail is
+    the shifted suffix sum, bit-compatible with ``repro.core.rates``.
     """
-    rx = (powers_vk * gains_vk * gains_vk).astype(jnp.float32)
-    order = jnp.argsort(-rx, axis=-1)
-    rx_s = jnp.take_along_axis(rx, order, axis=-1)
-    w_s = jnp.take_along_axis(weights_vk.astype(jnp.float32), order, axis=-1)
-    suffix = jnp.cumsum(rx_s[..., ::-1], axis=-1)[..., ::-1]
-    tail = suffix - rx_s
-    return jnp.sum(w_s * jnp.log2(1.0 + rx_s / (tail + noise_power)), axis=-1)
+    from repro.core import rates_jax
+
+    return rates_jax.batched_weighted_rates(
+        jnp.asarray(powers_vk, jnp.float32),
+        jnp.asarray(gains_vk, jnp.float32),
+        jnp.asarray(weights_vk, jnp.float32),
+        noise_power,
+    )

@@ -11,7 +11,9 @@ so the suffix interference sum is computed with the O(K^2) comparison matrix
 
 which is exactly "sum of receive powers decoded after i" under the
 descending-rx, ties-by-lower-index order that the numpy engine
-(``repro.core.rates``) uses via a stable argsort.  The double loop is
+(``repro.core.rates``) and its jnp mirror (``repro.core.rates_jax``, the
+device-resident MWIS greedy's scorer) use via a stable argsort.  The double
+loop is
 unrolled at trace time (K static), so the kernel is pure VPU elementwise
 work — no gather, no sort network.
 

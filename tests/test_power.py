@@ -64,6 +64,30 @@ def test_weighted_rate_matches_noma_module():
     assert ours == pytest.approx(ref, rel=1e-5)
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 9999))
+def test_mapel_batched_matches_sequential(k, seed):
+    """The lockstep polyblock (schedulers' finalization path) is mapel()
+    group-for-group — bit-identical powers, rates, iteration counts, gaps."""
+    rng = np.random.default_rng(seed)
+    groups = 5
+    gains = np.abs(rng.normal(1e-6, 5e-7, (groups, k))) + 1e-8
+    w = rng.dirichlet(np.ones(k), size=groups)
+    batched = power.mapel_batched(gains, w, PMAX, NOISE, eps=1e-3)
+    for i in range(groups):
+        seq = power.mapel(gains[i], w[i], PMAX, NOISE, eps=1e-3)
+        np.testing.assert_array_equal(batched.powers[i], seq.powers)
+        assert batched.weighted_rates[i] == seq.weighted_rate
+        assert batched.iterations[i] == seq.iterations
+        assert batched.gaps[i] == seq.gap
+
+
+def test_mapel_batched_empty():
+    out = power.mapel_batched(np.zeros((0, 3)), np.zeros((0, 3)), PMAX, NOISE)
+    assert out.powers.shape == (0, 3)
+    assert out.weighted_rates.shape == (0,)
+
+
 def test_mapel_gap_reported():
     gains, w = _instance(3, 7)
     sol = power.mapel(gains, w, PMAX, NOISE, eps=1e-3, max_iter=300)

@@ -1,0 +1,136 @@
+"""Scheduler edge cases (T*K > M horizons) and the jax backend equivalence.
+
+Regression coverage for the crash/bias sweep: every scheduler must survive
+horizons that exhaust the device set (Yang et al. 2019 comparison regime),
+emitting empty tail groups instead of crashing; and the device-resident
+greedy (``backend="jax"``) must reproduce the numpy path bit-for-bit.
+"""
+import numpy as np
+import pytest
+
+from repro.core import scheduling
+
+NOISE = 1.6e-14
+
+
+def _instance(m, t, seed):
+    rng = np.random.default_rng(seed)
+    gains = np.abs(rng.normal(1e-6, 5e-7, (t, m))) + 1e-8
+    w = rng.dirichlet(np.ones(m))
+    return gains, w
+
+
+def _make(name, gains, w, k):
+    if name == "lazy-gwmin":
+        return scheduling.lazy_greedy_schedule(gains, w, k, noise_power=NOISE)
+    if name == "literal-gwmin":
+        return scheduling.literal_graph_schedule(gains, w, k, noise_power=NOISE)
+    if name == "random":
+        rng = np.random.default_rng(0)
+        return scheduling.random_schedule(rng, gains, w, k, noise_power=NOISE)
+    if name == "round-robin":
+        return scheduling.round_robin_schedule(gains, w, k, noise_power=NOISE)
+    if name == "proportional-fair":
+        return scheduling.proportional_fair_schedule(gains, w, k, noise_power=NOISE)
+    raise ValueError(name)
+
+
+# --------------------------------------------------------------------------
+# T*K > M: the horizon exhausts the device set
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "name",
+    ["lazy-gwmin", "literal-gwmin", "random", "round-robin", "proportional-fair"],
+)
+@pytest.mark.parametrize("m,t,k", [(5, 4, 2), (4, 3, 2), (6, 8, 1)])
+def test_tk_exceeds_m_no_crash(name, m, t, k):
+    """All five schedulers must survive T*K > M: C1/C2 hold, every id is in
+    range, and rounds beyond the device supply come back empty, not bogus."""
+    gains, w = _instance(m, t, seed=3)
+    sched = _make(name, gains, w, k)
+    assert sched.validate(m, k)
+    assert len(sched.rounds) == t
+    assert all(len(grp) <= k for grp in sched.rounds)
+    # no device can appear anywhere once all M are used
+    assert sum(len(grp) for grp in sched.rounds) <= m
+    assert len(sched.scheduled_devices()) == sum(len(g) for g in sched.rounds)
+
+
+@pytest.mark.parametrize("name", ["round-robin", "proportional-fair"])
+def test_exhausting_schedulers_cover_all_devices_then_go_empty(name):
+    """The sequential policies schedule every device and then emit () tails
+    (proportional-fair used to crash here: an empty ``avail`` built with
+    ``np.array([])`` is float64 and rejects fancy indexing)."""
+    m, t, k = 4, 3, 2
+    gains, w = _instance(m, t, seed=7)
+    sched = _make(name, gains, w, k)
+    assert sched.scheduled_devices() == set(range(m))
+    assert sched.rounds[-1] == ()
+
+
+def test_proportional_fair_empty_avail_regression():
+    """Direct regression for src/repro/core/scheduling.py PF indexing: with
+    T*K well past M the scheduler iterates many all-empty rounds."""
+    gains, w = _instance(3, 6, seed=0)
+    sched = scheduling.proportional_fair_schedule(gains, w, 2, noise_power=NOISE)
+    assert sched.validate(3, 2)
+    assert sched.rounds[2:] == [(), (), (), ()]
+
+
+# --------------------------------------------------------------------------
+# backend="jax": device-resident greedy == numpy greedy, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "m,k,t,pool,seed",
+    [
+        (8, 2, 3, 24, 0),      # pool >= M: full enumeration
+        (12, 3, 3, 24, 1),
+        (32, 3, 4, 24, 2),     # proxy-ranked pool (M > pool)
+        (24, 3, 4, 8, 3),
+        (32, 2, 5, 8, 4),
+        (5, 2, 4, 24, 5),      # T*K > M: host tail path for leftover groups
+        (30, 3, 11, 8, 6),     # T*K > M with proxy pool
+    ],
+)
+def test_jax_backend_bit_identical(m, k, t, pool, seed):
+    pytest.importorskip("jax")
+    gains, w = _instance(m, t, seed)
+    a = scheduling.lazy_greedy_schedule(
+        gains, w, k, noise_power=NOISE, candidate_pool=pool
+    )
+    b = scheduling.lazy_greedy_schedule(
+        gains, w, k, noise_power=NOISE, candidate_pool=pool, backend="jax"
+    )
+    assert a.rounds == b.rounds
+    for pa, pb in zip(a.powers, b.powers):
+        np.testing.assert_array_equal(pa, pb)
+    for ra, rb in zip(a.rates, b.rates):
+        np.testing.assert_array_equal(ra, rb)
+    assert a.weighted_sum_rate == b.weighted_sum_rate
+    assert b.validate(m, k)
+
+
+def test_jax_backend_bit_identical_with_mapel_refinement():
+    """Selection equality carries through the batched MAPEL finalization."""
+    pytest.importorskip("jax")
+    gains, w = _instance(10, 3, seed=11)
+    a = scheduling.lazy_greedy_schedule(
+        gains, w, 2, power_mode="mapel", noise_power=NOISE
+    )
+    b = scheduling.lazy_greedy_schedule(
+        gains, w, 2, power_mode="mapel", noise_power=NOISE, backend="jax"
+    )
+    assert a.rounds == b.rounds
+    for pa, pb in zip(a.powers, b.powers):
+        np.testing.assert_array_equal(pa, pb)
+    assert a.weighted_sum_rate == b.weighted_sum_rate
+
+
+def test_unknown_backend_raises():
+    gains, w = _instance(6, 2, seed=0)
+    with pytest.raises(ValueError, match="backend"):
+        scheduling.lazy_greedy_schedule(
+            gains, w, 2, noise_power=NOISE, backend="tpu-v9"
+        )

@@ -61,9 +61,22 @@ def test_adaptive_bits_recorded_and_bounded(small_world):
         assert np.all(log.compression_ratios >= 1.0)
 
 
-def test_tdma_uses_full_precision(small_world):
+def test_tdma_adaptive_compression_uses_subslot_budget(small_world):
+    """Regression: adaptive compression used to be silently skipped for TDMA
+    (uploads forced to 32 bits), biasing the NOMA-vs-TDMA comparison.  Each
+    TDMA device now quantizes to its own interference-free sub-slot budget."""
     ds, cell, shards = small_world
     res = _run(ds, cell, shards, rounds=3, uplink="tdma")
+    bits = np.concatenate([log.bits for log in res.logs])
+    assert np.all((bits >= 1) & (bits <= 32))
+    assert np.any(bits < 32), "TDMA budgets here are compressive; 32 = skipped"
+    ratios = np.concatenate([log.compression_ratios for log in res.logs])
+    assert np.all(ratios >= 1.0)
+
+
+def test_tdma_compression_none_stays_full_precision(small_world):
+    ds, cell, shards = small_world
+    res = _run(ds, cell, shards, rounds=2, uplink="tdma", compression="none")
     for log in res.logs:
         assert np.all(log.bits == 32)
 
@@ -74,6 +87,36 @@ def test_deterministic_given_seed(small_world):
     r2 = _run(ds, cell, shards, rounds=3, seed=5)
     np.testing.assert_array_equal(r1.accuracies(), r2.accuracies())
     assert [l.devices for l in r1.logs] == [l.devices for l in r2.logs]
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    """4-device cell so a 3-round, K=2 horizon exhausts the device set."""
+    ds = make_mnist_like(num_samples=400, seed=0)
+    cell = channel.CellConfig(num_devices=4)
+    shards = dirichlet_partition(ds.y_train, 4, seed=0)
+    return ds, cell, shards
+
+
+@pytest.mark.parametrize("uplink", ["noma", "tdma"])
+@pytest.mark.parametrize("scheduler", ["round-robin", "proportional-fair"])
+def test_fl_survives_empty_tail_rounds(tiny_world, uplink, scheduler):
+    """Regression: T*K > M schedules produce empty tail groups; aggregation
+    used to crash (``tree_map`` over zero deltas).  Empty rounds must skip
+    training/aggregation but still advance the wall clock and be logged."""
+    ds, cell, shards = tiny_world
+    cfg = FLConfig(num_devices=4, group_size=2, num_rounds=3,
+                   scheduler=scheduler, power_mode="max",
+                   compression="adaptive", seed=0)
+    res = fl.run_federated_learning(ds, shards, cell, cfg, uplink=uplink)
+    assert len(res.logs) == 3
+    assert res.logs[-1].devices == ()
+    assert res.logs[-1].bits.size == 0 and res.logs[-1].rates.size == 0
+    times = res.times()
+    assert np.all(np.diff(times) > 0), "empty rounds must still take time"
+    assert np.isfinite(res.logs[-1].test_accuracy)
+    # the empty round leaves the model untouched: same accuracy as round 1
+    assert res.logs[-1].test_accuracy == res.logs[-2].test_accuracy
 
 
 def test_scheduler_weighted_rate_ordering(small_world):
