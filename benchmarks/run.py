@@ -1,6 +1,10 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke] [--only NAME]
+
+``--smoke`` is the CI mode: implies ``--fast`` and skips the FL-training
+suites (fig5/fig6) plus the roofline sweep, so the job finishes in minutes
+while still exercising the power, scheduling, kernel, and compression paths.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 The scheduling suite additionally returns backend-sweep records that are
@@ -26,12 +30,19 @@ SUITES = [
     ("roofline", "benchmarks.roofline_bench"),     # EXPERIMENTS §Roofline
 ]
 
+# FL-training suites (minutes even at --fast) and the roofline sweep are out
+# of scope for the CI smoke job.
+SMOKE_SKIP = {"fig5", "fig6", "roofline"}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: --fast minus the FL-training suites")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    fast = args.fast or args.smoke
 
     import importlib
 
@@ -39,13 +50,15 @@ def main() -> None:
     for name, module in SUITES:
         if args.only and args.only != name:
             continue
+        if args.smoke and name in SMOKE_SKIP and args.only != name:
+            continue
         print(f"# === {name} ({module}) ===", flush=True)
         try:
-            result = importlib.import_module(module).main(fast=args.fast)
+            result = importlib.import_module(module).main(fast=fast)
             if name == "scheduling" and isinstance(result, dict):
                 # --fast runs a single small-M case; don't clobber the
                 # tracked full-sweep record with it.
-                suffix = "_fast" if args.fast else ""
+                suffix = "_fast" if fast else ""
                 out = pathlib.Path(__file__).resolve().parent.parent / (
                     f"BENCH_scheduling{suffix}.json"
                 )

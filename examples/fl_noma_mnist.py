@@ -3,8 +3,14 @@ K=3 per round, T=35 rounds, LeNet-300-100, non-iid data — reproducing the
 Fig. 5 / Fig. 6 settings.
 
     PYTHONPATH=src python examples/fl_noma_mnist.py [--fast] \
-        [--scheduler lazy-gwmin|random|round-robin|proportional-fair] \
-        [--power mapel|max] [--uplink noma|tdma]
+        [--scheduler NAME] [--power mapel|max] [--uplink noma|tdma]
+
+``--scheduler`` accepts any registered policy name (see
+``repro.core.scheduling``): the paper's precomputed schedulers
+(lazy-gwmin, literal-gwmin, random, round-robin, proportional-fair) and
+the online FL-state-aware policies (update-aware, age-fair), which are
+selected round by round inside the training loop from the previous
+rounds' update norms / ages.
 
 Takes ~10-20 min at full scale on this CPU; --fast runs M=60, T=10.
 """
@@ -13,14 +19,15 @@ import argparse
 import numpy as np
 
 from repro.config import FLConfig
-from repro.core import channel, fl
+from repro.core import channel, fl, scheduling
 from repro.data import dirichlet_partition, make_mnist_like
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
-    ap.add_argument("--scheduler", default="lazy-gwmin")
+    ap.add_argument("--scheduler", default="lazy-gwmin",
+                    choices=scheduling.available_policies())
     ap.add_argument("--power", default="mapel")
     ap.add_argument("--uplink", default="noma")
     ap.add_argument("--rounds", type=int, default=None)
@@ -39,8 +46,9 @@ def main():
                    scheduler=args.scheduler, power_mode=args.power,
                    compression="adaptive", seed=args.seed)
 
+    online = scheduling.get_policy(args.scheduler).online
     print(f"M={m} K=3 T={t} scheduler={args.scheduler} power={args.power} "
-          f"uplink={args.uplink}")
+          f"uplink={args.uplink} mode={'online (live)' if online else 'precomputed'}")
     res = fl.run_federated_learning(
         ds, shards, cell, cfg, uplink=args.uplink,
         progress=lambda log: print(

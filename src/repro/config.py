@@ -162,9 +162,46 @@ class FLConfig:
     learning_rate: float = 0.01     # eta
     batch_size: int = 10             # B
     local_epochs: int = 1
-    scheduler: str = "lazy-gwmin"    # lazy-gwmin | literal-gwmin | random | round-robin | proportional-fair
+    scheduler: str = "lazy-gwmin"    # any registered policy name: lazy-gwmin |
+                                     # literal-gwmin | random | round-robin |
+                                     # proportional-fair | update-aware | age-fair
     scheduler_backend: str = "numpy"  # numpy | jax (device-resident greedy, M >> 300)
     power_mode: str = "mapel"        # mapel | max
     compression: str = "adaptive"    # adaptive | none
     paper_exact_range: bool = False  # DoReFa fixed [-1,1] range (Eq. 7)
     seed: int = 0
+
+    def __post_init__(self):
+        """Fail at construction, not deep inside fl.py mid-simulation.
+
+        Scheduler and power-mode names are checked against the live
+        registries (``scheduling.available_policies`` /
+        ``power.POWER_MODES``), so a freshly registered policy is valid
+        here with no config change; the imports are deferred to keep
+        ``repro.config`` import-light.
+        """
+        if self.num_rounds < 1:
+            raise ValueError(f"num_rounds must be >= 1, got {self.num_rounds}")
+        if not 1 <= self.group_size <= self.num_devices:
+            raise ValueError(
+                f"group_size must be in [1, num_devices={self.num_devices}], "
+                f"got {self.group_size}"
+            )
+        from repro.core import power as power_lib
+        from repro.core import scheduling
+
+        if self.scheduler not in scheduling.available_policies():
+            raise ValueError(
+                f"unknown scheduler {self.scheduler!r}; registered: "
+                f"{scheduling.available_policies()}"
+            )
+        if self.power_mode not in power_lib.POWER_MODES:
+            raise ValueError(
+                f"unknown power_mode {self.power_mode!r}; known: "
+                f"{power_lib.POWER_MODES}"
+            )
+        if self.scheduler_backend not in scheduling.SCHEDULER_BACKENDS:
+            raise ValueError(
+                f"unknown scheduler_backend {self.scheduler_backend!r}; "
+                f"known: {scheduling.SCHEDULER_BACKENDS}"
+            )

@@ -4,8 +4,11 @@ adaptive compression, and the FedAvg runtime.
  - channel.py      : cell + fading channel model            (paper §II-A)
  - noma.py         : SIC decoding, SINR, rates              (paper Eq. 4-6)
  - rates.py        : batched SIC rate engine (shared hot path; paper Eq. 2-4)
- - power.py        : MAPEL polyblock power allocation        (paper §III-C)
- - scheduling.py   : MWIS scheduling graph + Algorithm 2     (paper §III-A/B)
+ - power.py        : MAPEL polyblock power allocation +
+                     PowerAllocator (solve/solve_batched)     (paper §III-C)
+ - scheduling.py   : SchedulerPolicy protocol + registry; MWIS
+                     Algorithm 2 and the online (FL-state-aware)
+                     policies                                 (paper §III-A/B)
  - quantization.py : DoReFa adaptive gradient quantization   (paper §II-B)
  - compression.py  : gradient pytree codec over the kernels  (paper Alg. 1)
  - fl.py           : FedAvg over the simulated NOMA cell     (paper §IV)

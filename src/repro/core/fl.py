@@ -3,8 +3,12 @@
 Faithful paper-scale FedAvg over the simulated NOMA cell:
   per round t:
     1. PS broadcasts theta^t (downlink timing model, no compression).
-    2. The scheduler has pre-assigned K devices to round t (MWIS schedule
-       over the whole horizon, or a per-round baseline policy).
+    2. The scheduler assigns K devices to round t.  Precomputed policies
+       (MWIS schedule over the whole horizon, the §IV baselines) planned
+       this before training started; online policies (``policy.online``,
+       e.g. update-aware / age-fair) are called *here*, inside the loop,
+       reading the previous rounds' update norms, participation counts,
+       and realized rates from a ``scheduling.Observation``.
     3. Each scheduled device runs local SGD on its own non-iid shard and
        produces a model delta.
     4. The uplink rate of each device sets the bit budget c_k = R_k * B * t;
@@ -35,6 +39,7 @@ import numpy as np
 from repro.config import FLConfig
 from repro.core import channel as chan
 from repro.core import compression, noma, scheduling
+from repro.core import power as power_lib
 from repro.core import quantization as qlib
 from repro.models import lenet
 from repro.utils.tree import tree_count
@@ -110,32 +115,48 @@ def local_update(params, xs, ys, cfg: FLConfig):
 # Scheduling front-end
 # --------------------------------------------------------------------------
 
+def policy_config(cell: chan.CellConfig, cfg: FLConfig) -> scheduling.PolicyConfig:
+    """PolicyConfig from the FL settings + the cell physics."""
+    return scheduling.PolicyConfig(
+        group_size=cfg.group_size,
+        power_mode=cfg.power_mode,
+        pmax=cell.max_power_w,
+        noise_power=cell.noise_power_w,
+        backend=cfg.scheduler_backend,
+        seed=cfg.seed,
+    )
+
+
 def make_schedule(
     gains_tm: np.ndarray,
     weights_m: np.ndarray,
     cell: chan.CellConfig,
     cfg: FLConfig,
+    policy: "scheduling.SchedulerPolicy | None" = None,
 ) -> scheduling.Schedule:
-    kw = dict(
-        power_mode=cfg.power_mode,
-        pmax=cell.max_power_w,
-        noise_power=cell.noise_power_w,
+    """One-shot schedule via the policy registry (string if/elif retired).
+
+    ``policy`` lets a caller that already resolved ``cfg.scheduler`` (e.g.
+    ``run_federated_learning``) reuse the instance.  For online policies
+    this drives ``select_round`` with rate/participation feedback only (no
+    FL state outside the training loop) — the live path in
+    :func:`run_federated_learning` is the real deal.
+    """
+    if policy is None:
+        policy = scheduling.get_policy(cfg.scheduler)
+    return scheduling.build_schedule(
+        policy, gains_tm, weights_m, policy_config(cell, cfg)
     )
-    k = cfg.group_size
-    if cfg.scheduler == "lazy-gwmin":
-        return scheduling.lazy_greedy_schedule(
-            gains_tm, weights_m, k, backend=cfg.scheduler_backend, **kw
-        )
-    if cfg.scheduler == "literal-gwmin":
-        return scheduling.literal_graph_schedule(gains_tm, weights_m, k, **kw)
-    if cfg.scheduler == "random":
-        rng = np.random.default_rng(cfg.seed + 17)
-        return scheduling.random_schedule(rng, gains_tm, weights_m, k, **kw)
-    if cfg.scheduler == "round-robin":
-        return scheduling.round_robin_schedule(gains_tm, weights_m, k, **kw)
-    if cfg.scheduler == "proportional-fair":
-        return scheduling.proportional_fair_schedule(gains_tm, weights_m, k, **kw)
-    raise ValueError(f"unknown scheduler {cfg.scheduler!r}")
+
+
+def _tree_l2(tree) -> float:
+    """||tree||_2 over all leaves (the update-aware policies' norm signal).
+
+    The squared dots accumulate on device; the single ``float()`` at the end
+    is the only host sync (this runs per scheduled device per live round).
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    return float(jnp.sqrt(sum(jnp.vdot(leaf, leaf) for leaf in leaves)))
 
 
 # --------------------------------------------------------------------------
@@ -174,9 +195,29 @@ def run_federated_learning(
                                    cfg.num_rounds)
     )
 
+    # Scheduling: precomputed policies (and caller-supplied schedules) fix
+    # the whole horizon now; online policies run live inside the round loop.
+    policy = obs = policy_state = allocator = None
     if schedule is None:
-        schedule = make_schedule(gains, weights, cell, cfg)
-    schedule.validate(cell.num_devices, cfg.group_size)
+        policy = scheduling.get_policy(cfg.scheduler)
+        if getattr(policy, "online", False):
+            pcfg = policy_config(cell, cfg)
+            policy_state = policy.init_state(gains, weights, pcfg)
+            obs = scheduling.Observation.initial(cell.num_devices)
+            allocator = power_lib.make_power_allocator(
+                cfg.power_mode, cell.max_power_w, cell.noise_power_w
+            )
+        else:
+            # one owner for precomputed construction (validated inside
+            # build_schedule with the policy's own C1 expectation),
+            # reusing the instance resolved above
+            schedule = make_schedule(gains, weights, cell, cfg, policy=policy)
+            policy = None
+    else:
+        # Caller-supplied schedule: its own allow_revisits flag (set by
+        # build_schedule from the producing policy, or by the caller for a
+        # hand-rolled revisiting schedule) decides C1 strictness.
+        schedule.validate(cell.num_devices, cfg.group_size)
 
     # Downlink broadcast time on the large-scale gain only: the paper's
     # Fig. 5 time scale (35 rounds in ~10-22 s) implies a fading-free
@@ -192,11 +233,23 @@ def run_federated_learning(
     logs = []
     t_wall = 0.0
     for t in range(cfg.num_rounds):
-        devs = schedule.rounds[t]
-        rates = schedule.rates[t]  # spectral efficiency (bit/s/Hz)
+        if policy is not None:   # live mode: select with FL-state feedback
+            group, policy_state = policy.select_round(t, policy_state, obs)
+            devs = tuple(int(d) for d in group)
+            scheduling.validate_group(
+                devs, cell.num_devices, cfg.group_size,
+                label=f"round-{t} group from policy {policy.name!r}",
+            )
+            powers_t, rates = scheduling.finalize_round(
+                devs, t, gains, weights, allocator, cell.noise_power_w
+            )
+        else:
+            devs = schedule.rounds[t]
+            powers_t = schedule.powers[t]
+            rates = schedule.rates[t]  # spectral efficiency (bit/s/Hz)
         if uplink == "tdma":
             # each device alone in its sub-slot, interference-free
-            p = schedule.powers[t]
+            p = powers_t
             g = gains[t, list(devs)]
             rates = np.asarray(
                 noma.tdma_rates(jnp.asarray(p), jnp.asarray(g), cell.noise_power_w)
@@ -208,10 +261,17 @@ def run_federated_learning(
             budgets = rates * cell.bandwidth_hz * cell.slot_seconds
             round_time = cell.slot_seconds + dl_time
 
-        deltas, bits_used, ratios, agg_w = [], [], [], []
+        deltas, bits_used, ratios, agg_w, norms = [], [], [], [], []
         for j, d in enumerate(devs):
             idx = shards[d]
             delta = local_update(params, dataset.x_train[idx], dataset.y_train[idx], cfg)
+            if policy is not None and getattr(policy, "needs_norms", True):
+                # the policies' norm signal is the raw local update, taken
+                # before quantization (Amiri et al. rank by what the device
+                # computed, not by what the channel let through); policies
+                # that never read obs.update_norms skip the per-device
+                # reduction + host sync entirely
+                norms.append(_tree_l2(delta))
             if cfg.compression == "adaptive":
                 # NOMA: SIC rate over the shared slot; TDMA: interference-free
                 # rate over the device's own sub-slot. Both budgets are in
@@ -238,6 +298,12 @@ def run_federated_learning(
         # else: empty round (T*K > M schedules legitimately produce empty
         # tail groups) — no uplink, no aggregation; the wall clock still
         # advances and the round is still logged below.
+
+        if policy is not None:
+            # feed realized norms/rates back for the next select_round
+            # (norms is empty when the policy declared needs_norms=False)
+            obs = obs.record_round(t, devs, np.asarray(rates),
+                                   norms if norms else None)
 
         t_wall += round_time
         acc = float(acc_fn(params, x_test, y_test)) if t % eval_every == 0 else logs[-1].test_accuracy

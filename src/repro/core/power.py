@@ -422,6 +422,71 @@ def mapel_batched(
     return BatchedPowerSolution(powers, rate, it, np.maximum(gap, 0.0))
 
 
+# --------------------------------------------------------------------------
+# PowerAllocator: the one object that owns power allocation
+# --------------------------------------------------------------------------
+
+POWER_MODES = ("max", "mapel")
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerAllocator:
+    """Power allocation for scheduled NOMA groups, single or batched.
+
+    ``solve`` allocates one group ((K,) gains/weights -> (K,) powers);
+    ``solve_batched`` allocates V groups in one call ((V, K) -> (V, K)).
+    For ``mode="mapel"`` the batched form is the lockstep polyblock
+    (:func:`mapel_batched`), which reproduces the sequential solver
+    group-for-group; ``mode="max"`` is the no-power-control baseline.
+
+    Instances are also callable ((gains, weights) -> powers) and expose
+    ``batched`` as an alias of ``solve_batched``, so every legacy
+    ``PowerFn`` call site (``scheduling.score_subsets``, the schedulers'
+    finalization) works unchanged.
+    """
+
+    mode: str
+    pmax: float
+    noise_power: float
+    eps: float = 1e-3           # MAPEL relative optimality gap
+
+    def __post_init__(self):
+        if self.mode not in POWER_MODES:
+            raise ValueError(
+                f"unknown power mode {self.mode!r}; known: {POWER_MODES}"
+            )
+
+    def solve(self, gains_k, weights_k) -> np.ndarray:
+        """(K,) powers for one group, input (unsorted) order."""
+        if self.mode == "max":
+            return max_power(gains_k, self.pmax)
+        return mapel(
+            gains_k, weights_k, self.pmax, self.noise_power, eps=self.eps
+        ).powers
+
+    def solve_batched(self, gains_vk, weights_vk) -> np.ndarray:
+        """(V, K) powers for V groups in one call."""
+        if self.mode == "max":
+            return np.full(np.shape(gains_vk), self.pmax, dtype=np.float64)
+        return mapel_batched(
+            gains_vk, weights_vk, self.pmax, self.noise_power, eps=self.eps
+        ).powers
+
+    def __call__(self, gains_k, weights_k) -> np.ndarray:
+        return self.solve(gains_k, weights_k)
+
+    @property
+    def batched(self):
+        return self.solve_batched
+
+
+def make_power_allocator(
+    mode: str, pmax: float, noise_power: float
+) -> PowerAllocator:
+    """Factory behind ``FLConfig.power_mode`` (raises on unknown modes)."""
+    return PowerAllocator(mode, pmax, noise_power)
+
+
 def max_power(gains: np.ndarray, pmax: float) -> np.ndarray:
     """No-power-control baseline: everyone transmits at p^max (paper §IV)."""
     return np.full(len(np.atleast_1d(gains)), pmax, dtype=np.float64)

@@ -1,21 +1,70 @@
-"""User scheduling as maximum-weight independent set (paper §III).
+"""User scheduling policies for FL over NOMA (paper §III + online variants).
 
-Scheduling graph (§III-A): a vertex v = (S, t) is a K-subset S of devices
-proposed for round t; there are C(M, K) * T vertices. Edges connect vertices
-that violate
-  C1 (device scheduled more than once): S_i and S_j share a device, t_i != t_j
-  C2 (one group per round): t_i == t_j.
-An independent set with T vertices is a complete schedule; vertex weight
+Every scheduler is a **policy** behind one protocol (:class:`SchedulerPolicy`):
+
+    state = policy.init_state(gains_tm, weights_m, cfg)          # once
+    group, state = policy.select_round(t, state, obs)            # per round
+
+``cfg`` is a :class:`PolicyConfig` (group size K, power mode, cell physics,
+seed); ``obs`` is an :class:`Observation` carrying the *online* observables —
+previous-round local-update norms, per-device participation counts /
+last-participation ages, and realized uplink rates.  Policies come in two
+flavours:
+
+  * **precomputed** (``online = False``): device selection depends only on
+    the channel realizations, so ``init_state`` plans the whole T-round
+    horizon up front (the paper's setting).  ``select_round`` just replays
+    the plan and ignores ``obs``.
+  * **online** (``online = True``): selection reads FL state from ``obs``
+    round by round; ``fl.run_federated_learning`` calls ``select_round``
+    *inside* the training loop (live mode) and feeds the realized norms /
+    rates back.  Online policies may re-schedule a device across rounds
+    (``respects_c1 = False``) — they trade the paper's one-shot C1
+    constraint for long-horizon participation control.
+
+Policies are looked up by name through a registry (:func:`register_policy` /
+:func:`get_policy`); power allocation and rate computation live in one shared
+finalization step (:func:`finalize_schedule` for full horizons,
+:func:`finalize_round` for live mode) built on
+:class:`repro.core.power.PowerAllocator`.
+
+Registered policies
+-------------------
+  * ``lazy-gwmin`` — graph-free Algorithm 2 (GWMIN MWIS greedy); numpy or
+    device-resident jax backend.  The paper's proposed scheduler.
+  * ``literal-gwmin`` — Algorithm 2 on the explicit C(M,K)*T-vertex graph
+    (exact fidelity, exponential memory; M up to ~12).
+  * ``random`` / ``round-robin`` / ``proportional-fair`` — the §IV / ref [6]
+    baselines (PF ranks by the weighted solo rate w_k R_k; ``by_gain=True``
+    reproduces the seed's raw-gain ranking).
+  * ``update-aware`` — online; scores devices by ‖ΔW_k‖ · solo rate
+    (Amiri et al., arXiv:2001.10402) so informative *and* fast uplinks win.
+  * ``age-fair`` — online; staleness-boosted weighted rates
+    (1 + age_k) · w_k R_k (Yang et al., arXiv:1908.06287) so no device
+    starves over long horizons.
+
+How to add a policy
+-------------------
+1. Write a class with ``init_state`` / ``select_round`` (subclass
+   ``_PrecomputedPolicy`` for offline plans or ``_ScoreTopKPolicy`` for
+   online top-K scoring rules — then it is one ``_plan`` / ``_score``
+   method).  Declare ``online`` and ``respects_c1`` (and, for online
+   policies, ``needs_norms`` — whether the FL loop should compute
+   per-device update norms for you; it defaults to True when absent).
+2. Decorate it with ``@register_policy("my-policy")``.  The name becomes a
+   valid ``FLConfig.scheduler`` immediately (config validation reads the
+   registry), and ``benchmarks/fig6_schemes.py`` can sweep it by name.
+3. If it is online, return groups from ``select_round`` using only
+   ``state`` + ``obs``; the runtime owns power allocation and rates via the
+   shared finalization (never allocate powers inside a policy).
+
+MWIS formulation (paper §III-A)
+-------------------------------
+A vertex v = (S, t) is a K-subset S proposed for round t; edges connect
+vertices violating C1 (shared device, t_i != t_j) or C2 (t_i == t_j).  An
+independent set with T vertices is a complete schedule; vertex weight
 w(v) = sum_{k in S} w_k R_k^t makes the MWIS the max-weighted-sum-rate
 schedule (Eq. 9-10).
-
-Three solvers:
-  * ``literal_graph_schedule`` — the paper's Algorithm 2 (GWMIN greedy) on the
-    explicitly constructed graph. Exact fidelity; exponential memory, use for
-    M up to ~12.
-  * ``lazy_greedy_schedule`` — provably equivalent to Algorithm 2 without
-    materializing the graph (see note below); scales to the paper's M=300.
-  * ``brute_force_schedule`` — exact optimum by enumeration (tests only).
 
 Equivalence note (DESIGN.md §6.3): in the residual graph after any number of
 GWMIN removals, the remaining vertex set is always {all K-subsets of unused
@@ -46,7 +95,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Callable, Sequence
+from typing import Any, Callable, Protocol, Sequence
 
 import numpy as np
 
@@ -56,32 +105,27 @@ from repro.core import rates as rates_lib
 PowerFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
 # (gains_K, weights_K) -> powers_K; may carry a ``batched`` attribute
 # (gains_VK, weights_VK) -> powers_VK for vectorized candidate scoring.
+# ``power.PowerAllocator`` satisfies this interface.
+
+SCHEDULER_BACKENDS = ("numpy", "jax")
+# the lazy greedy's drivers (_lazy_gwmin_rounds); FLConfig validates
+# ``scheduler_backend`` against this same tuple.
 
 
 # --------------------------------------------------------------------------
 # Shared helpers
 # --------------------------------------------------------------------------
 
-def make_power_fn(mode: str, pmax: float, noise_power: float) -> PowerFn:
-    """'max' -> everyone at p^max; 'mapel' -> optimal MLFP allocation.
+def make_power_fn(
+    mode: str, pmax: float, noise_power: float
+) -> power_lib.PowerAllocator:
+    """Legacy-named front door to :class:`repro.core.power.PowerAllocator`.
 
-    Both modes carry a ``batched`` attribute ((V, K) -> (V, K)) so candidate
-    scoring and schedule finalization run one grouped call instead of a
-    Python loop per group; MAPEL's is the lockstep polyblock
-    (``power.mapel_batched``), which reproduces the sequential solver
-    group-for-group.
+    The allocator is callable and carries ``batched`` (an alias of
+    ``solve_batched``), so it drops into every historical ``PowerFn`` call
+    site; new code should use ``power.make_power_allocator`` directly.
     """
-    if mode == "max":
-        fn = lambda g, w: np.full(len(g), pmax)
-        fn.batched = lambda g_vk, w_vk: np.full(np.shape(g_vk), pmax)
-        return fn
-    if mode == "mapel":
-        fn = lambda g, w: power_lib.mapel(g, w, pmax, noise_power, eps=1e-3).powers
-        fn.batched = lambda g_vk, w_vk: power_lib.mapel_batched(
-            g_vk, w_vk, pmax, noise_power, eps=1e-3
-        ).powers
-        return fn
-    raise ValueError(f"unknown power mode {mode!r}")
+    return power_lib.make_power_allocator(mode, pmax, noise_power)
 
 
 def _solo_proxy(gains, weights, pmax: float, noise_power: float) -> np.ndarray:
@@ -148,6 +192,24 @@ def _rates(powers, gains, noise_power):
     return rates_lib.sic_rates(powers, gains, noise_power)
 
 
+def validate_group(group, num_devices: int, k: int, *, label: str = "group"):
+    """One round's group invariants: size <= K, distinct, in-range ids.
+
+    The single owner of the per-round rules — ``Schedule.validate`` applies
+    it to every round and the live FL loop applies it to each group an
+    online policy hands back.  Raises ValueError.
+    """
+    if (
+        len(group) > k
+        or len(set(group)) != len(group)
+        or any(not 0 <= d < num_devices for d in group)
+    ):
+        raise ValueError(
+            f"invalid {label} {tuple(group)}: at most K={k} distinct "
+            f"device ids in [0, {num_devices})"
+        )
+
+
 @dataclasses.dataclass
 class Schedule:
     """A complete schedule: device groups, powers and rates per round."""
@@ -157,30 +219,64 @@ class Schedule:
     rates: list             # list[T] of np.ndarray (K,) spectral efficiencies
     weighted_sum_rate: float
     method: str
+    allow_revisits: bool = False   # True for schedules built by online
+                                   # policies (respects_c1 = False)
 
     def scheduled_devices(self) -> set:
         return set(itertools.chain.from_iterable(self.rounds))
 
-    def validate(self, num_devices: int, k: int):
-        """Assert constraints C1/C2 hold."""
+    def validate(self, num_devices: int, k: int, allow_revisits=None):
+        """Assert constraints C2 (and C1 unless revisits are allowed) hold.
+
+        ``allow_revisits=None`` defers to the schedule's own flag (set by
+        ``build_schedule`` from the producing policy's ``respects_c1``).
+        Online policies legitimately re-schedule devices across rounds;
+        they still may not duplicate a device within a round or emit
+        out-of-range ids.
+        """
+        if allow_revisits is None:
+            allow_revisits = self.allow_revisits
         seen = set()
-        for grp in self.rounds:
-            assert len(grp) <= k, "C2 violated"
+        for t, grp in enumerate(self.rounds):
+            validate_group(grp, num_devices, k, label=f"round-{t} group")
             for d in grp:
-                assert 0 <= d < num_devices
-                assert d not in seen, "C1 violated"
+                if not allow_revisits and d in seen:
+                    raise ValueError(
+                        f"C1 violated: device {d} scheduled again in round "
+                        f"{t} (set allow_revisits for online-policy schedules)"
+                    )
                 seen.add(d)
         return True
 
 
-def _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, method):
+def finalize_round(group, t, gains_tm, weights_m, power_fn, noise_power):
+    """Power allocation + SIC rates for one scheduled group (live mode).
+
+    The per-round twin of :func:`finalize_schedule`: online policies select
+    a group inside the FL loop and the runtime finalizes it immediately —
+    policies themselves never allocate power.  Returns ``(powers, rates)``,
+    both (len(group),), input order.
+    """
+    idx = np.asarray(group, dtype=np.intp)
+    if idx.size == 0:
+        return np.zeros(0), np.zeros(0)
+    g = gains_tm[t, idx]
+    w = weights_m[idx]
+    p = np.asarray(power_fn(g, w))
+    r = rates_lib.sic_rates(p, g, noise_power)
+    return p, r
+
+
+def finalize_schedule(rounds, gains_tm, weights_m, power_fn, noise_power, method):
     """Powers/rates/weighted-sum for a complete schedule.
 
-    Groups are batched by size and handed to the allocator in one call per
-    size (for MAPEL this is the batched polyblock refinement over all T
-    selected groups — the per-round loop it replaces solved each group
-    separately).  Tail groups smaller than K (T*K > M horizons) and empty
-    rounds batch among themselves.
+    The shared finalization step: every policy's selected rounds pass
+    through here, so power allocation and rate computation have exactly one
+    owner.  Groups are batched by size and handed to the allocator in one
+    call per size (for MAPEL this is the batched polyblock refinement over
+    all T selected groups — the per-round loop it replaces solved each
+    group separately).  Tail groups smaller than K (T*K > M horizons) and
+    empty rounds batch among themselves.
     """
     num_rounds = len(rounds)
     powers, rates = [None] * num_rounds, [None] * num_rounds
@@ -205,6 +301,9 @@ def _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, method):
     for t in range(num_rounds):    # accumulate in round order (reproducible)
         total += float(vals[t])
     return Schedule(list(map(tuple, rounds)), powers, rates, total, method)
+
+
+_finalize = finalize_schedule    # back-compat alias (pre-policy-API name)
 
 
 # --------------------------------------------------------------------------
@@ -280,19 +379,24 @@ def gwmin_mwis(graph: SchedulingGraph) -> list:
     return selected
 
 
+def _literal_gwmin_rounds(gains_tm, weights_m, k, power_fn, noise_power):
+    """Selection step of the literal Algorithm 2 (graph build + GWMIN)."""
+    graph = build_scheduling_graph(gains_tm, weights_m, k, power_fn, noise_power)
+    chosen = gwmin_mwis(graph)
+    rounds = [()] * gains_tm.shape[0]
+    for v in chosen:
+        subset, t = graph.vertices[v]
+        rounds[t] = subset
+    return rounds
+
+
 def literal_graph_schedule(
     gains_tm, weights_m, k, *, power_mode="max", pmax=0.01, noise_power=1e-13
 ) -> Schedule:
     """Paper-exact Algorithm 2 (explicit graph). Small M only."""
     power_fn = make_power_fn(power_mode, pmax, noise_power)
-    graph = build_scheduling_graph(gains_tm, weights_m, k, power_fn, noise_power)
-    chosen = gwmin_mwis(graph)
-    num_rounds = gains_tm.shape[0]
-    rounds = [()] * num_rounds
-    for v in chosen:
-        subset, t = graph.vertices[v]
-        rounds[t] = subset
-    return _finalize(
+    rounds = _literal_gwmin_rounds(gains_tm, weights_m, k, power_fn, noise_power)
+    return finalize_schedule(
         rounds, gains_tm, weights_m, power_fn, noise_power, "literal-gwmin"
     )
 
@@ -455,19 +559,34 @@ def lazy_greedy_schedule(
     candidate subset — the literal paper procedure — is O(C(pool,K)) solves
     per round and only reorders near-ties). literal_graph_schedule keeps
     the paper's exact per-vertex power allocation."""
-    search_fn = make_power_fn("max", pmax, noise_power)
     power_fn = make_power_fn(power_mode, pmax, noise_power)
+    rounds = _lazy_gwmin_rounds(
+        gains_tm, weights_m, k, pmax=pmax, noise_power=noise_power,
+        candidate_pool=candidate_pool, backend=backend,
+    )
+    return finalize_schedule(
+        rounds, gains_tm, weights_m, power_fn, noise_power, "lazy-gwmin"
+    )
+
+
+def _lazy_gwmin_rounds(
+    gains_tm, weights_m, k, *, pmax, noise_power, candidate_pool, backend
+):
+    """Selection step of the lazy greedy (the subset *search* runs at max
+    power regardless of the finalization power mode — see
+    ``lazy_greedy_schedule``)."""
+    search_fn = make_power_fn("max", pmax, noise_power)
     if backend == "numpy":
-        rounds = _greedy_rounds_numpy(
+        return _greedy_rounds_numpy(
             gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax
         )
-    elif backend == "jax":
-        rounds = _greedy_rounds_jax(
+    if backend == "jax":
+        return _greedy_rounds_jax(
             gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax
         )
-    else:
-        raise ValueError(f"unknown scheduling backend {backend!r}")
-    return _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, "lazy-gwmin")
+    raise ValueError(
+        f"unknown scheduling backend {backend!r}; known: {SCHEDULER_BACKENDS}"
+    )
 
 
 # --------------------------------------------------------------------------
@@ -506,7 +625,7 @@ def brute_force_schedule(
             assign.pop()
 
     rec(0, set(), 0.0, [])
-    return _finalize(
+    return finalize_schedule(
         best_assign, gains_tm, weights_m, power_fn, noise_power, "brute-force"
     )
 
@@ -515,6 +634,14 @@ def brute_force_schedule(
 # Baseline schedulers (paper §IV comparisons and ref [6] policies)
 # --------------------------------------------------------------------------
 
+def _random_rounds(rng: np.random.Generator, num_rounds, num_devices, k):
+    """Selection step of random scheduling: one device permutation, chunked
+    into K-groups round by round (tail rounds past the supply come back
+    empty)."""
+    perm = rng.permutation(num_devices)
+    return [tuple(perm[t * k : (t + 1) * k].tolist()) for t in range(num_rounds)]
+
+
 def random_schedule(
     rng: np.random.Generator, gains_tm, weights_m, k,
     *, power_mode="max", pmax=0.01, noise_power=1e-13,
@@ -522,9 +649,18 @@ def random_schedule(
     """Random scheduling respecting C1 (each device at most once)."""
     power_fn = make_power_fn(power_mode, pmax, noise_power)
     num_rounds, num_devices = gains_tm.shape
-    perm = rng.permutation(num_devices)
-    rounds = [tuple(perm[t * k : (t + 1) * k].tolist()) for t in range(num_rounds)]
-    return _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, "random")
+    rounds = _random_rounds(rng, num_rounds, num_devices, k)
+    return finalize_schedule(
+        rounds, gains_tm, weights_m, power_fn, noise_power, "random"
+    )
+
+
+def _round_robin_rounds(num_rounds, num_devices, k):
+    """Selection step of round robin: fixed device order, K per round."""
+    return [
+        tuple(range(min(t * k, num_devices), min((t + 1) * k, num_devices)))
+        for t in range(num_rounds)
+    ]
 
 
 def round_robin_schedule(
@@ -538,24 +674,23 @@ def round_robin_schedule(
     """
     power_fn = make_power_fn(power_mode, pmax, noise_power)
     num_rounds, num_devices = gains_tm.shape
-    rounds = [
-        tuple(range(min(t * k, num_devices), min((t + 1) * k, num_devices)))
-        for t in range(num_rounds)
-    ]
-    return _finalize(rounds, gains_tm, weights_m, power_fn, noise_power, "round-robin")
+    rounds = _round_robin_rounds(num_rounds, num_devices, k)
+    return finalize_schedule(
+        rounds, gains_tm, weights_m, power_fn, noise_power, "round-robin"
+    )
 
 
-def proportional_fair_schedule(
-    gains_tm, weights_m, k, *, power_mode="max", pmax=0.01, noise_power=1e-13
-) -> Schedule:
-    """Per round, pick the K best unused devices by instantaneous gain.
+def _proportional_fair_rounds(
+    gains_tm, weights_m, k, *, by_gain, pmax, noise_power
+):
+    """Selection step of proportional fair: greedy top-K unused devices.
 
-    When every device has been used before the horizon ends (T*K > M) the
-    remaining rounds get empty groups, like round-robin's tail — the intp
-    dtype keeps the empty-``avail`` gather legal (a bare ``np.array([])`` is
-    float64 and rejects fancy indexing).
+    Default ranking is the weighted solo-proxy rate w_k log2(1 + p g^2 /
+    sigma^2) — the same per-device quantity the MWIS objective sums — with
+    a stable sort so score ties keep the lower device id.  ``by_gain=True``
+    reproduces the seed's raw-gain ranking (which ignored the FedAvg
+    weights the objective weighs by) bit-for-bit, unstable sort included.
     """
-    power_fn = make_power_fn(power_mode, pmax, noise_power)
     num_rounds, num_devices = gains_tm.shape
     used = set()
     rounds = []
@@ -563,10 +698,373 @@ def proportional_fair_schedule(
         avail = np.array(
             [d for d in range(num_devices) if d not in used], dtype=np.intp
         )
-        order = avail[np.argsort(-gains_tm[t, avail])]
+        if by_gain:
+            order = avail[np.argsort(-gains_tm[t, avail])]
+        else:
+            score = _solo_proxy(
+                gains_tm[t, avail], weights_m[avail], pmax, noise_power
+            )
+            order = avail[np.argsort(-score, kind="stable")]
         grp = tuple(order[:k].tolist())
         used |= set(grp)
         rounds.append(grp)
-    return _finalize(
+    return rounds
+
+
+def proportional_fair_schedule(
+    gains_tm, weights_m, k, *, power_mode="max", pmax=0.01, noise_power=1e-13,
+    by_gain=False,
+) -> Schedule:
+    """Per round, pick the K best unused devices by weighted solo rate.
+
+    The ranking is w_k R_k^solo (see ``_proportional_fair_rounds``) so this
+    baseline competes on the objective the MWIS scheduler is scored against;
+    the seed ranked by raw channel gain, which starves high-weight /
+    mid-gain devices — pass ``by_gain=True`` to reproduce that behaviour.
+
+    When every device has been used before the horizon ends (T*K > M) the
+    remaining rounds get empty groups, like round-robin's tail — the intp
+    dtype keeps the empty-``avail`` gather legal (a bare ``np.array([])`` is
+    float64 and rejects fancy indexing).
+    """
+    power_fn = make_power_fn(power_mode, pmax, noise_power)
+    rounds = _proportional_fair_rounds(
+        gains_tm, weights_m, k, by_gain=by_gain, pmax=pmax,
+        noise_power=noise_power,
+    )
+    return finalize_schedule(
         rounds, gains_tm, weights_m, power_fn, noise_power, "proportional-fair"
     )
+
+
+# --------------------------------------------------------------------------
+# SchedulerPolicy protocol, registry, and the registered policies
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """Everything a policy may read at ``init_state`` time.
+
+    The FL runtime builds this from ``FLConfig`` + the cell physics
+    (``fl.policy_config``); standalone callers construct it directly.
+    ``seed`` seeds any policy-internal randomness — schedules must be
+    reproducible from (inputs, PolicyConfig) alone.
+    """
+
+    group_size: int                 # K
+    power_mode: str = "max"         # finalization allocator (max | mapel)
+    pmax: float = 0.01
+    noise_power: float = 1e-13
+    candidate_pool: int = 24        # lazy greedy enumeration bound
+    backend: str = "numpy"          # lazy greedy driver (numpy | jax)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Observation:
+    """Online observables fed to ``select_round`` (all (M,) arrays).
+
+    The FL runtime updates these after every live round
+    (:meth:`record_round`); offline drivers (:func:`build_schedule`) feed
+    realized rates and participation but no update norms (there is no FL
+    state outside the training loop).
+    """
+
+    update_norms: np.ndarray    # last observed ||delta W_k||_2; 0 if never
+    participation: np.ndarray   # rounds device k was scheduled so far
+    last_round: np.ndarray      # last round k participated; -1 if never
+    realized_rates: np.ndarray  # rate k achieved when last scheduled; 0 if never
+
+    @classmethod
+    def initial(cls, num_devices: int) -> "Observation":
+        return cls(
+            update_norms=np.zeros(num_devices),
+            participation=np.zeros(num_devices, dtype=np.intp),
+            last_round=np.full(num_devices, -1, dtype=np.intp),
+            realized_rates=np.zeros(num_devices),
+        )
+
+    def record_round(self, t, group, rates_k, update_norms_k=None) -> "Observation":
+        """Functional update after round t (the caller keeps the new copy,
+        so a policy holding an old Observation never sees the future)."""
+        obs = Observation(
+            self.update_norms.copy(), self.participation.copy(),
+            self.last_round.copy(), self.realized_rates.copy(),
+        )
+        idx = np.asarray(group, dtype=np.intp)
+        if idx.size:
+            obs.participation[idx] += 1
+            obs.last_round[idx] = t
+            obs.realized_rates[idx] = np.asarray(rates_k, dtype=np.float64)
+            if update_norms_k is not None:
+                obs.update_norms[idx] = np.asarray(update_norms_k, dtype=np.float64)
+        return obs
+
+
+class SchedulerPolicy(Protocol):
+    """The scheduling policy protocol (see module docstring).
+
+    ``online`` declares whether ``select_round`` reads FL state from the
+    Observation (live mode inside the training loop) or replays a
+    precomputed plan; ``respects_c1`` whether the policy schedules each
+    device at most once over the horizon (the paper's C1).  Online
+    policies may additionally declare ``needs_norms`` (default True) —
+    set it False to tell the FL loop not to compute per-device update
+    norms the policy never reads.
+    """
+
+    name: str
+    online: bool
+    respects_c1: bool
+
+    def init_state(self, gains_tm: np.ndarray, weights_m: np.ndarray,
+                   cfg: PolicyConfig) -> Any: ...
+
+    def select_round(self, t: int, state: Any,
+                     obs: Observation) -> "tuple[tuple, Any]": ...
+
+
+_REGISTRY: "dict[str, type]" = {}
+
+
+def register_policy(name: str):
+    """Class decorator registering a SchedulerPolicy under ``name``.
+
+    The name immediately becomes a valid ``FLConfig.scheduler`` value
+    (config validation reads :func:`available_policies`).
+    """
+
+    def deco(cls):
+        if name in _REGISTRY:
+            raise ValueError(f"policy {name!r} already registered")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_policy(name: str, **options) -> "SchedulerPolicy":
+    """Instantiate the policy registered under ``name``.
+
+    ``options`` are forwarded to the policy constructor (e.g.
+    ``get_policy("proportional-fair", by_gain=True)``).
+    """
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; registered: {available_policies()}"
+        ) from None
+    return cls(**options)
+
+
+def available_policies() -> tuple:
+    """Sorted names of all registered policies."""
+    return tuple(sorted(_REGISTRY))
+
+
+def build_schedule(
+    policy: "SchedulerPolicy", gains_tm, weights_m, cfg: PolicyConfig
+) -> Schedule:
+    """Drive any policy over the whole horizon and finalize the result.
+
+    Precomputed policies run their one-shot plan in ``init_state`` and this
+    reduces to plan + shared finalization — bit-identical to the historical
+    per-scheduler functions.  Online policies are driven with realized
+    rates and participation fed back between rounds, but no update norms
+    (FL state exists only inside ``fl.run_federated_learning``'s live
+    mode); useful for rate-only studies and benchmarks.
+    """
+    gains_tm = np.asarray(gains_tm)
+    weights_m = np.asarray(weights_m)
+    num_rounds, num_devices = gains_tm.shape
+    power_fn = power_lib.make_power_allocator(
+        cfg.power_mode, cfg.pmax, cfg.noise_power
+    )
+    state = policy.init_state(gains_tm, weights_m, cfg)
+    obs = Observation.initial(num_devices)
+    online = getattr(policy, "online", False)
+    rounds, powers, rates, total = [], [], [], 0.0
+    for t in range(num_rounds):
+        group, state = policy.select_round(t, state, obs)
+        group = tuple(int(d) for d in group)
+        rounds.append(group)
+        if online:
+            # the loop must allocate per round anyway (the policy reads the
+            # realized rates next round), so keep the results instead of
+            # re-solving every group in a trailing finalize_schedule pass
+            p_k, r_k = finalize_round(
+                group, t, gains_tm, weights_m, power_fn, cfg.noise_power
+            )
+            obs = obs.record_round(t, group, r_k)
+            powers.append(p_k)
+            rates.append(r_k)
+            total += float(np.sum(weights_m[np.asarray(group, np.intp)] * r_k))
+    revisits = not getattr(policy, "respects_c1", True)
+    if online:
+        sched = Schedule(rounds, powers, rates, total, policy.name, revisits)
+    else:
+        sched = finalize_schedule(
+            rounds, gains_tm, weights_m, power_fn, cfg.noise_power, policy.name
+        )
+        sched.allow_revisits = revisits
+    sched.validate(num_devices, cfg.group_size)
+    return sched
+
+
+class _PrecomputedPolicy:
+    """Base for offline policies: plan the whole horizon in ``init_state``
+    (selection depends only on channel realizations), replay per round."""
+
+    online = False
+    respects_c1 = True
+
+    def init_state(self, gains_tm, weights_m, cfg: PolicyConfig):
+        return self._plan(np.asarray(gains_tm), np.asarray(weights_m), cfg)
+
+    def select_round(self, t, state, obs):
+        return tuple(state[t]), state
+
+
+@register_policy("lazy-gwmin")
+class LazyGwminPolicy(_PrecomputedPolicy):
+    """Graph-free Algorithm 2 (the paper's proposed MWIS scheduler)."""
+
+    def _plan(self, gains_tm, weights_m, cfg):
+        return _lazy_gwmin_rounds(
+            gains_tm, weights_m, cfg.group_size, pmax=cfg.pmax,
+            noise_power=cfg.noise_power, candidate_pool=cfg.candidate_pool,
+            backend=cfg.backend,
+        )
+
+
+@register_policy("literal-gwmin")
+class LiteralGwminPolicy(_PrecomputedPolicy):
+    """Algorithm 2 on the explicit scheduling graph (small M only)."""
+
+    def _plan(self, gains_tm, weights_m, cfg):
+        power_fn = power_lib.make_power_allocator(
+            cfg.power_mode, cfg.pmax, cfg.noise_power
+        )
+        return _literal_gwmin_rounds(
+            gains_tm, weights_m, cfg.group_size, power_fn, cfg.noise_power
+        )
+
+
+@register_policy("random")
+class RandomPolicy(_PrecomputedPolicy):
+    """Random C1-respecting schedule, reproducible from the policy alone.
+
+    The RNG is derived in ``init_state`` from ``cfg.seed + SEED_OFFSET``;
+    the offset decorrelates the scheduling permutation from the model-init /
+    channel streams that consume ``cfg.seed`` directly.  (Historically the
+    ``+ 17`` lived as a magic number inside ``fl.make_schedule``.)
+    """
+
+    SEED_OFFSET = 17
+
+    def _plan(self, gains_tm, weights_m, cfg):
+        rng = np.random.default_rng(cfg.seed + self.SEED_OFFSET)
+        num_rounds, num_devices = gains_tm.shape
+        return _random_rounds(rng, num_rounds, num_devices, cfg.group_size)
+
+
+@register_policy("round-robin")
+class RoundRobinPolicy(_PrecomputedPolicy):
+    """Fixed device order, K per round (ref [6] baseline)."""
+
+    def _plan(self, gains_tm, weights_m, cfg):
+        num_rounds, num_devices = gains_tm.shape
+        return _round_robin_rounds(num_rounds, num_devices, cfg.group_size)
+
+
+@register_policy("proportional-fair")
+class ProportionalFairPolicy(_PrecomputedPolicy):
+    """Greedy top-K unused devices by weighted solo rate (``by_gain=True``
+    reproduces the seed's raw-gain ranking)."""
+
+    def __init__(self, by_gain: bool = False):
+        self.by_gain = by_gain
+
+    def _plan(self, gains_tm, weights_m, cfg):
+        return _proportional_fair_rounds(
+            gains_tm, weights_m, cfg.group_size, by_gain=self.by_gain,
+            pmax=cfg.pmax, noise_power=cfg.noise_power,
+        )
+
+
+class _ScoreTopKPolicy:
+    """Base for online policies: rank all devices by a per-round score and
+    take the top K (stable sort, ties to the lower device id).  Subclasses
+    implement ``_score(t, solo, obs) -> (M,)`` where ``solo`` is the
+    weighted interference-free rate w_k log2(1 + p g_k^2 / sigma^2) at
+    round t.  Online policies revisit devices across rounds — long-horizon
+    fairness is the score's job, not C1's.
+    """
+
+    online = True
+    respects_c1 = False
+    needs_norms = False     # True: the FL loop computes ||delta W_k|| per
+                            # scheduled device and feeds it back via obs
+
+    def init_state(self, gains_tm, weights_m, cfg: PolicyConfig):
+        return {
+            "gains": np.asarray(gains_tm),
+            "weights": np.asarray(weights_m),
+            "cfg": cfg,
+        }
+
+    def select_round(self, t, state, obs):
+        cfg = state["cfg"]
+        solo = _solo_proxy(
+            state["gains"][t], state["weights"], cfg.pmax, cfg.noise_power
+        )
+        score = np.asarray(self._score(t, solo, obs), dtype=np.float64)
+        k = min(cfg.group_size, len(score))
+        top = np.argsort(-score, kind="stable")[:k]
+        return tuple(int(d) for d in top), state
+
+
+@register_policy("update-aware")
+class UpdateAwarePolicy(_ScoreTopKPolicy):
+    """Update-aware scheduling (Amiri et al., arXiv:2001.10402).
+
+    Score = (estimated ||delta W_k||_2) * (weighted solo rate): devices
+    whose recent local updates were large *and* whose uplink is currently
+    fast win the slot — the BN2-BC flavour of the reference, with the last
+    observed norm standing in for the (untransmitted) current one.  Devices
+    never yet observed take the running mean of observed norms (1.0 before
+    any observation), so round 0 reduces to best-channel and unexplored
+    devices stay competitive; observed-zero norms are floored so a device
+    whose local gradient once came back numerically zero (the norm is
+    taken on the raw pre-quantization delta) is merely deprioritized, not
+    starved forever.
+    """
+
+    needs_norms = True
+
+    def _score(self, t, solo, obs):
+        norms = obs.update_norms.copy()
+        seen = obs.participation > 0
+        default = float(norms[seen].mean()) if seen.any() else 1.0
+        default = max(default, 1e-12)
+        norms[~seen] = default
+        norms[seen] = np.maximum(norms[seen], 1e-3 * default)
+        return norms * solo
+
+
+@register_policy("age-fair")
+class AgeFairPolicy(_ScoreTopKPolicy):
+    """Age-fair scheduling (Yang et al., arXiv:1908.06287).
+
+    Score = (1 + age_k) * (weighted solo rate), age_k = rounds since device
+    k last participated (never-scheduled devices age from round 0).  The
+    staleness boost grows without bound, so every device is eventually
+    rescheduled no matter how weak its channel — the update-age fairness
+    the reference shows FL needs over long horizons.
+    """
+
+    def _score(self, t, solo, obs):
+        age = (t - obs.last_round).astype(np.float64)
+        return (1.0 + age) * solo

@@ -1,0 +1,294 @@
+"""SchedulerPolicy protocol + registry (the scheduling API redesign).
+
+Covers: every registered policy end-to-end on a tiny instance, bit-identical
+legacy equivalence (registry name vs pre-refactor function, both backends),
+the random policy's self-contained RNG (seed + 17 hoist), the proportional
+fair weighted-rate ranking fix, online policy scoring semantics, and the
+FLConfig construction-time validation against the registries.
+"""
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import power as power_lib
+from repro.core import scheduling
+
+NOISE = 1.6e-14
+PMAX = 0.01
+
+LEGACY_NAMES = [
+    "lazy-gwmin", "literal-gwmin", "random", "round-robin", "proportional-fair",
+]
+
+
+def _instance(m, t, seed):
+    rng = np.random.default_rng(seed)
+    gains = np.abs(rng.normal(1e-6, 5e-7, (t, m))) + 1e-8
+    w = rng.dirichlet(np.ones(m))
+    return gains, w
+
+
+def _pcfg(k, **kw):
+    kw.setdefault("pmax", PMAX)
+    kw.setdefault("noise_power", NOISE)
+    return scheduling.PolicyConfig(group_size=k, **kw)
+
+
+def _legacy(name, gains, w, k, *, power_mode="max", seed=0, backend="numpy"):
+    """The pre-refactor call paths (including fl.make_schedule's seed+17)."""
+    kw = dict(power_mode=power_mode, pmax=PMAX, noise_power=NOISE)
+    if name == "lazy-gwmin":
+        return scheduling.lazy_greedy_schedule(gains, w, k, backend=backend, **kw)
+    if name == "literal-gwmin":
+        return scheduling.literal_graph_schedule(gains, w, k, **kw)
+    if name == "random":
+        rng = np.random.default_rng(seed + 17)
+        return scheduling.random_schedule(rng, gains, w, k, **kw)
+    if name == "round-robin":
+        return scheduling.round_robin_schedule(gains, w, k, **kw)
+    if name == "proportional-fair":
+        return scheduling.proportional_fair_schedule(gains, w, k, **kw)
+    raise ValueError(name)
+
+
+def _assert_bit_identical(a, b):
+    assert a.rounds == b.rounds
+    for pa, pb in zip(a.powers, b.powers):
+        np.testing.assert_array_equal(pa, pb)
+    for ra, rb in zip(a.rates, b.rates):
+        np.testing.assert_array_equal(ra, rb)
+    assert a.weighted_sum_rate == b.weighted_sum_rate
+    assert a.method == b.method
+
+
+# --------------------------------------------------------------------------
+# Registry basics
+# --------------------------------------------------------------------------
+
+def test_registry_contains_all_policies():
+    names = scheduling.available_policies()
+    for name in LEGACY_NAMES + ["update-aware", "age-fair"]:
+        assert name in names
+
+
+def test_get_policy_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        scheduling.get_policy("mystery-policy")
+
+
+def test_register_policy_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        scheduling.register_policy("random")(type("Dup", (), {}))
+
+
+def test_every_registered_policy_end_to_end():
+    """Every policy runs on the tiny (M=9, K=3, T=4) instance — a T*K > M
+    horizon, so precomputed policies emit tails and online ones revisit —
+    and returns a Schedule passing validate."""
+    gains, w = _instance(9, 4, seed=3)
+    for name in scheduling.available_policies():
+        policy = scheduling.get_policy(name)
+        sched = scheduling.build_schedule(policy, gains, w, _pcfg(3))
+        assert isinstance(sched, scheduling.Schedule)
+        assert len(sched.rounds) == 4
+        assert sched.method == name
+        assert sched.validate(9, 3, allow_revisits=not policy.respects_c1)
+        if policy.online:
+            # online policies never leave a round empty
+            assert all(len(g) == 3 for g in sched.rounds)
+
+
+# --------------------------------------------------------------------------
+# Legacy equivalence: registry name == pre-refactor function, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", LEGACY_NAMES)
+@pytest.mark.parametrize("m,t,k", [(9, 3, 2), (8, 2, 3)])
+def test_legacy_names_bit_identical(name, m, t, k):
+    gains, w = _instance(m, t, seed=11)
+    sched = scheduling.build_schedule(
+        scheduling.get_policy(name), gains, w, _pcfg(k)
+    )
+    _assert_bit_identical(sched, _legacy(name, gains, w, k))
+
+
+@pytest.mark.parametrize("name", ["lazy-gwmin", "random", "proportional-fair"])
+def test_legacy_names_bit_identical_with_mapel(name):
+    gains, w = _instance(8, 3, seed=5)
+    sched = scheduling.build_schedule(
+        scheduling.get_policy(name), gains, w, _pcfg(2, power_mode="mapel")
+    )
+    _assert_bit_identical(sched, _legacy(name, gains, w, 2, power_mode="mapel"))
+
+
+def test_lazy_gwmin_policy_jax_backend_bit_identical():
+    pytest.importorskip("jax")
+    gains, w = _instance(12, 3, seed=7)
+    sched = scheduling.build_schedule(
+        scheduling.get_policy("lazy-gwmin"), gains, w, _pcfg(3, backend="jax")
+    )
+    _assert_bit_identical(sched, _legacy("lazy-gwmin", gains, w, 3, backend="jax"))
+    _assert_bit_identical(sched, _legacy("lazy-gwmin", gains, w, 3))
+
+
+# --------------------------------------------------------------------------
+# Random policy: schedule reproducible from (inputs, PolicyConfig) alone
+# --------------------------------------------------------------------------
+
+def test_random_policy_owns_its_rng():
+    """The seed+17 offset lives in RandomPolicy.init_state now, not in
+    fl.make_schedule — same cfg, same schedule, no FL runtime involved."""
+    gains, w = _instance(10, 3, seed=0)
+    a = scheduling.build_schedule(
+        scheduling.get_policy("random"), gains, w, _pcfg(3, seed=42)
+    )
+    b = scheduling.build_schedule(
+        scheduling.get_policy("random"), gains, w, _pcfg(3, seed=42)
+    )
+    assert a.rounds == b.rounds
+    # and the plan is exactly the documented derivation
+    perm = np.random.default_rng(42 + scheduling.RandomPolicy.SEED_OFFSET
+                                 ).permutation(10)
+    assert a.rounds == [tuple(perm[t * 3:(t + 1) * 3].tolist()) for t in range(3)]
+    c = scheduling.build_schedule(
+        scheduling.get_policy("random"), gains, w, _pcfg(3, seed=43)
+    )
+    assert c.rounds != a.rounds
+
+
+# --------------------------------------------------------------------------
+# Proportional fair: rank by w_k R_k, not raw gain (failing before the fix)
+# --------------------------------------------------------------------------
+
+def test_proportional_fair_ranks_by_weighted_rate():
+    """Device 0 has the strongest channel but negligible FedAvg weight; the
+    MWIS objective (w_k R_k) prefers device 1.  The seed's raw-gain ranking
+    picked device 0 — that behaviour now requires by_gain=True."""
+    gains = np.array([[3e-6, 1e-6]])
+    w = np.array([0.01, 0.99])
+    fixed = scheduling.proportional_fair_schedule(gains, w, 1, noise_power=NOISE)
+    legacy = scheduling.proportional_fair_schedule(
+        gains, w, 1, noise_power=NOISE, by_gain=True
+    )
+    assert legacy.rounds == [(0,)]          # raw gain: strongest channel wins
+    assert fixed.rounds == [(1,)]           # weighted solo rate: w_k R_k wins
+    assert fixed.weighted_sum_rate > legacy.weighted_sum_rate
+
+
+def test_proportional_fair_by_gain_through_registry():
+    gains, w = _instance(10, 3, seed=9)
+    via_registry = scheduling.build_schedule(
+        scheduling.get_policy("proportional-fair", by_gain=True),
+        gains, w, _pcfg(3),
+    )
+    direct = scheduling.proportional_fair_schedule(
+        gains, w, 3, noise_power=NOISE, by_gain=True
+    )
+    _assert_bit_identical(via_registry, direct)
+
+
+# --------------------------------------------------------------------------
+# Online policies: scoring semantics
+# --------------------------------------------------------------------------
+
+def test_update_aware_round0_is_best_channel():
+    """With no observations every device carries the same default norm, so
+    round 0 reduces to top-K by weighted solo rate."""
+    gains, w = _instance(8, 2, seed=13)
+    policy = scheduling.get_policy("update-aware")
+    cfg = _pcfg(3)
+    state = policy.init_state(gains, w, cfg)
+    obs = scheduling.Observation.initial(8)
+    group, _ = policy.select_round(0, state, obs)
+    solo = w * np.log2(1.0 + PMAX * gains[0] ** 2 / NOISE)
+    expect = tuple(np.argsort(-solo, kind="stable")[:3].tolist())
+    assert group == expect
+
+
+def test_update_aware_prefers_large_update_norms():
+    """A device whose last update was huge outranks a slightly-faster device
+    whose update was tiny — the ||dW|| * rate product at work."""
+    m = 4
+    gains = np.full((2, m), 1e-6)
+    w = np.full(m, 1.0 / m)                 # equal rates, equal weights
+    policy = scheduling.get_policy("update-aware")
+    state = policy.init_state(gains, w, _pcfg(2))
+    obs = scheduling.Observation.initial(m)
+    obs = obs.record_round(0, (0, 1, 2, 3), np.ones(m),
+                           update_norms_k=[0.1, 5.0, 0.2, 4.0])
+    group, _ = policy.select_round(1, state, obs)
+    assert set(group) == {1, 3}
+
+
+def test_age_fair_revisits_and_never_starves():
+    """Over a long horizon every device gets scheduled: the (1 + age) boost
+    eventually dominates any channel gap."""
+    m, t, k = 6, 12, 2
+    gains, w = _instance(m, t, seed=17)
+    sched = scheduling.build_schedule(
+        scheduling.get_policy("age-fair"), gains, w, _pcfg(k)
+    )
+    assert sched.scheduled_devices() == set(range(m))
+    assert all(len(g) == k for g in sched.rounds)   # no empty tail rounds
+    counts = np.zeros(m, dtype=int)
+    for g in sched.rounds:
+        counts[list(g)] += 1
+    assert counts.max() > 1                          # revisits happened (C1 off)
+
+
+def test_observation_record_round_is_functional():
+    obs = scheduling.Observation.initial(5)
+    new = obs.record_round(3, (1, 4), [2.0, 3.0], update_norms_k=[0.5, 0.7])
+    assert obs.participation.sum() == 0              # original untouched
+    assert new.participation[1] == 1 and new.last_round[4] == 3
+    assert new.realized_rates[4] == 3.0 and new.update_norms[1] == 0.5
+    assert new.last_round[0] == -1
+
+
+# --------------------------------------------------------------------------
+# FLConfig: construction-time validation against the registries
+# --------------------------------------------------------------------------
+
+def test_flconfig_rejects_bad_values_at_construction():
+    with pytest.raises(ValueError, match="scheduler"):
+        FLConfig(scheduler="mystery-policy")
+    with pytest.raises(ValueError, match="power_mode"):
+        FLConfig(power_mode="psycho")
+    with pytest.raises(ValueError, match="group_size"):
+        FLConfig(num_devices=2, group_size=3)
+    with pytest.raises(ValueError, match="num_rounds"):
+        FLConfig(num_rounds=0)
+    with pytest.raises(ValueError, match="scheduler_backend"):
+        FLConfig(scheduler_backend="tpu-v9")
+
+
+def test_flconfig_accepts_every_registered_policy():
+    for name in scheduling.available_policies():
+        cfg = FLConfig(scheduler=name)
+        assert cfg.scheduler == name
+    for mode in power_lib.POWER_MODES:
+        FLConfig(power_mode=mode)
+
+
+def test_live_mode_rejects_invalid_policy_groups():
+    """The FL loop validates what online policies hand back: oversized,
+    duplicated, or out-of-range groups raise instead of silently indexing
+    the wrong shard (negative ids would wrap through numpy indexing)."""
+    from repro.core import channel, fl
+    from repro.data import dirichlet_partition, make_mnist_like
+
+    @scheduling.register_policy("test-rogue")
+    class RoguePolicy(scheduling._ScoreTopKPolicy):
+        def select_round(self, t, state, obs):
+            return (-1, 0), state
+
+    try:
+        ds = make_mnist_like(num_samples=200, seed=0)
+        cell = channel.CellConfig(num_devices=4)
+        shards = dirichlet_partition(ds.y_train, 4, seed=0)
+        cfg = FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                       scheduler="test-rogue", power_mode="max", seed=0)
+        with pytest.raises(ValueError, match="invalid round-0 group"):
+            fl.run_federated_learning(ds, shards, cell, cfg)
+    finally:
+        scheduling._REGISTRY.pop("test-rogue", None)

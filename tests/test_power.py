@@ -93,3 +93,44 @@ def test_mapel_gap_reported():
     sol = power.mapel(gains, w, PMAX, NOISE, eps=1e-3, max_iter=300)
     # either converged to the certificate gap or hit the vertex cap
     assert (0 <= sol.gap <= 1e-3) or sol.iterations >= 300
+
+
+# --------------------------------------------------------------------------
+# PowerAllocator: the promoted make_power_fn (solve / solve_batched)
+# --------------------------------------------------------------------------
+
+def test_power_allocator_mapel_matches_scalar_and_batched():
+    alloc = power.make_power_allocator("mapel", PMAX, NOISE)
+    g1, w1 = _instance(3, 21)
+    g2, w2 = _instance(3, 22)
+    np.testing.assert_array_equal(
+        alloc.solve(g1, w1), power.mapel(g1, w1, PMAX, NOISE, eps=1e-3).powers
+    )
+    g_vk = np.stack([g1, g2])
+    w_vk = np.stack([w1, w2])
+    np.testing.assert_array_equal(
+        alloc.solve_batched(g_vk, w_vk),
+        power.mapel_batched(g_vk, w_vk, PMAX, NOISE, eps=1e-3).powers,
+    )
+    # batched rows == per-group scalar solves (the lockstep guarantee,
+    # reachable through the allocator API)
+    np.testing.assert_array_equal(alloc.solve_batched(g_vk, w_vk)[0],
+                                  alloc.solve(g1, w1))
+
+
+def test_power_allocator_max_mode_and_powerfn_compat():
+    """The allocator must drop into legacy PowerFn call sites: callable and
+    carrying a ``batched`` attribute."""
+    alloc = power.make_power_allocator("max", PMAX, NOISE)
+    g, w = _instance(3, 23)
+    np.testing.assert_array_equal(alloc(g, w), np.full(3, PMAX))
+    np.testing.assert_array_equal(
+        alloc.batched(np.stack([g, g]), np.stack([w, w])),
+        np.full((2, 3), PMAX),
+    )
+    assert alloc(g, w) is not None and callable(alloc.batched)
+
+
+def test_power_allocator_unknown_mode_raises():
+    with pytest.raises(ValueError, match="power mode"):
+        power.make_power_allocator("psycho", PMAX, NOISE)

@@ -141,3 +141,87 @@ def test_scheduler_weighted_rate_ordering(small_world):
         noise_power=cell.noise_power_w)
     assert g.weighted_sum_rate >= r.weighted_sum_rate
     assert g.weighted_sum_rate >= rr.weighted_sum_rate
+
+
+@pytest.mark.parametrize("scheduler", ["update-aware", "age-fair"])
+def test_online_policies_run_live_and_revisit(tiny_world, scheduler):
+    """Online policies select inside the training loop: with T*K > M they
+    revisit devices instead of emitting empty tail rounds, and the whole
+    run stays deterministic given the seed."""
+    ds, cell, shards = tiny_world
+    cfg = FLConfig(num_devices=4, group_size=2, num_rounds=3,
+                   scheduler=scheduler, power_mode="max",
+                   compression="adaptive", seed=0)
+    res = fl.run_federated_learning(ds, shards, cell, cfg)
+    assert len(res.logs) == 3
+    assert all(len(log.devices) == 2 for log in res.logs)
+    seen = [d for log in res.logs for d in log.devices]
+    assert len(seen) == 6
+    assert len(seen) > len(set(seen))                # some device revisited
+    assert all(0 <= d < 4 for d in seen)
+    assert np.isfinite(res.logs[-1].test_accuracy)
+    for log in res.logs:                              # live rounds upload
+        assert np.all(log.bits >= 1) and np.all(log.bits <= 32)
+    r2 = fl.run_federated_learning(ds, shards, cell, cfg)
+    assert [l.devices for l in res.logs] == [l.devices for l in r2.logs]
+    np.testing.assert_array_equal(res.accuracies(), r2.accuracies())
+
+
+def test_online_policy_live_tdma_uplink(tiny_world):
+    ds, cell, shards = tiny_world
+    cfg = FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                   scheduler="age-fair", power_mode="max",
+                   compression="adaptive", seed=0)
+    res = fl.run_federated_learning(ds, shards, cell, cfg, uplink="tdma")
+    assert len(res.logs) == 2
+    assert all(len(log.devices) == 2 for log in res.logs)
+
+
+def test_precomputed_policies_unchanged_by_registry_path(small_world):
+    """fl.make_schedule now resolves through the registry; the precomputed
+    path must keep producing the same schedules the FL loop consumed before
+    the redesign (spot-check: same devices for the same seed/config)."""
+    ds, cell, shards = small_world
+    from repro.core import scheduling
+
+    cfg = FLConfig(num_devices=M, group_size=3, num_rounds=4,
+                   scheduler="random", power_mode="max",
+                   compression="adaptive", seed=5)
+    key = jax.random.PRNGKey(cfg.seed)
+    dist = channel.sample_positions(jax.random.fold_in(key, 1), cell)
+    gains = np.asarray(channel.sample_round_channels(
+        jax.random.fold_in(key, 2), dist, cell, cfg.num_rounds))
+    sizes = np.array([len(s) for s in shards], float)
+    weights = sizes / sizes.sum()
+    via_registry = fl.make_schedule(gains, weights, cell, cfg)
+    direct = scheduling.random_schedule(
+        np.random.default_rng(cfg.seed + 17), gains, weights, 3,
+        power_mode="max", pmax=cell.max_power_w,
+        noise_power=cell.noise_power_w)
+    assert via_registry.rounds == direct.rounds
+    for pa, pb in zip(via_registry.powers, direct.powers):
+        np.testing.assert_array_equal(pa, pb)
+
+
+def test_caller_supplied_online_schedule_accepted(tiny_world):
+    """Regression: a Schedule built offline from an online policy revisits
+    devices; run_federated_learning must honor the schedule's own
+    allow_revisits flag (set by build_schedule) instead of crashing on C1."""
+    ds, cell, shards = tiny_world
+    from repro.core import scheduling
+
+    cfg = FLConfig(num_devices=4, group_size=2, num_rounds=3,
+                   scheduler="age-fair", power_mode="max",
+                   compression="adaptive", seed=0)
+    key = jax.random.PRNGKey(cfg.seed)
+    dist = channel.sample_positions(jax.random.fold_in(key, 1), cell)
+    gains = np.asarray(channel.sample_round_channels(
+        jax.random.fold_in(key, 2), dist, cell, cfg.num_rounds))
+    sizes = np.array([len(s) for s in shards], float)
+    weights = sizes / sizes.sum()
+    sched = scheduling.build_schedule(
+        scheduling.get_policy("age-fair"), gains, weights,
+        fl.policy_config(cell, cfg))
+    assert sum(len(g) for g in sched.rounds) > 4     # revisits present
+    res = fl.run_federated_learning(ds, shards, cell, cfg, schedule=sched)
+    assert [l.devices for l in res.logs] == [tuple(g) for g in sched.rounds]
