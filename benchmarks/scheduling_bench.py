@@ -60,10 +60,10 @@ def _candidate_scoring(fast: bool):
 
 
 def _schedule_once(backend, gains, w, k, pool):
-    if backend == "jax":
-        # untimed warm-up: each (T, V, K) case shape compiles greedy_step
-        # once, and compile latency would otherwise pollute the tracked
-        # per-schedule wall-clock
+    if backend.startswith("jax"):
+        # untimed warm-up: each (T, V, K) case shape compiles the jitted
+        # step / fused loop once, and compile latency would otherwise
+        # pollute the tracked per-schedule wall-clock
         scheduling.lazy_greedy_schedule(
             gains, w, k, noise_power=NOISE, candidate_pool=pool, backend=backend
         )
@@ -78,18 +78,22 @@ def backend_sweep(fast: bool):
     """M sweep x backend wall-clock for the lazy greedy (BENCH_scheduling.json).
 
     The numpy path re-enumerates C(pool, K) subsets per (step, round) in
-    Python; the jax path scores the whole (T, V, K) vertex tensor in one
-    jitted call per step.  M=3000 is jax-only — the host path is impractical
-    there, which is the point of the device-resident backend.
+    Python; "jax-stepwise" scores the whole (T, V, K) vertex tensor in one
+    jitted call per greedy step but syncs the argmax scalars to the host
+    every step; "jax" (fused) runs the entire selection loop inside a single
+    ``lax.while_loop`` and syncs exactly once per schedule — the sweep
+    measures the host-sync win directly.  M=3000 is device-only — the host
+    path is impractical there, which is the point of the device-resident
+    backend.
     """
     records = []
     cases = (
-        [(100, 10, 3, 32, ("numpy", "jax"))]
+        [(100, 10, 3, 32, ("numpy", "jax-stepwise", "jax"))]
         if fast
         else [
-            (300, 35, 3, 64, ("numpy", "jax")),
-            (1000, 50, 3, 64, ("numpy", "jax")),
-            (3000, 50, 3, 64, ("jax",)),
+            (300, 35, 3, 64, ("numpy", "jax-stepwise", "jax")),
+            (1000, 50, 3, 64, ("numpy", "jax-stepwise", "jax")),
+            (3000, 50, 3, 64, ("jax-stepwise", "jax")),
         ]
     )
     for m, t, k, pool, backends in cases:
@@ -108,18 +112,24 @@ def backend_sweep(fast: bool):
                  f"wsum {s.weighted_sum_rate:.3f}")
         if "numpy" in secs and "jax" in secs:
             emit(f"sched.backend_speedup_M{m}", 0.0,
-                 f"{secs['numpy'] / secs['jax']:.1f}x jax over numpy")
-    # equality spot check on an instance small enough for both paths
+                 f"{secs['numpy'] / secs['jax']:.1f}x fused jax over numpy")
+        if "jax-stepwise" in secs and "jax" in secs:
+            emit(f"sched.fused_vs_stepwise_M{m}", 0.0,
+                 f"{secs['jax-stepwise'] / secs['jax']:.2f}x fused over "
+                 f"stepwise (host-sync win)")
+    # equality spot check on an instance small enough for every path
     g_eq, w_eq = _instance(48, 6, seed=1)
     a = scheduling.lazy_greedy_schedule(
         g_eq, w_eq, 3, noise_power=NOISE, candidate_pool=16
     )
-    b = scheduling.lazy_greedy_schedule(
-        g_eq, w_eq, 3, noise_power=NOISE, candidate_pool=16, backend="jax"
-    )
-    identical = bool(
-        a.rounds == b.rounds and a.weighted_sum_rate == b.weighted_sum_rate
-    )
+    identical = True
+    for backend in ("jax", "jax-stepwise"):
+        b = scheduling.lazy_greedy_schedule(
+            g_eq, w_eq, 3, noise_power=NOISE, candidate_pool=16, backend=backend
+        )
+        identical = identical and bool(
+            a.rounds == b.rounds and a.weighted_sum_rate == b.weighted_sum_rate
+        )
     # recorded, not asserted: a ULP tie-flip must not abort the perf-record
     # write — bit equality is pinned by tests/test_scheduling_edges.py
     emit("sched.backend_equality_M48", 0.0,

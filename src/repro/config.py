@@ -165,7 +165,8 @@ class FLConfig:
     scheduler: str = "lazy-gwmin"    # any registered policy name: lazy-gwmin |
                                      # literal-gwmin | random | round-robin |
                                      # proportional-fair | update-aware | age-fair
-    scheduler_backend: str = "numpy"  # numpy | jax (device-resident greedy, M >> 300)
+    scheduler_backend: str = "numpy"  # numpy | jax (fused while_loop, M >> 300)
+                                      # | jax-stepwise (per-step device argmax)
     power_mode: str = "mapel"        # mapel | max
     compression: str = "adaptive"    # adaptive | none
     paper_exact_range: bool = False  # DoReFa fixed [-1,1] range (Eq. 7)

@@ -254,12 +254,19 @@ def run_federated_learning(
             rates = np.asarray(
                 noma.tdma_rates(jnp.asarray(p), jnp.asarray(g), cell.noise_power_w)
             )
-            slot = cell.slot_seconds  # each of the K devices gets a full slot
+            slot = cell.slot_seconds  # each scheduled device gets a full slot
             budgets = rates * cell.bandwidth_hz * slot
-            round_time = cfg.group_size * cell.slot_seconds + dl_time
+            # airtime = one sub-slot per *scheduled* device: empty/partial
+            # T*K > M tail rounds must not be charged the full K sub-slots
+            # (that skewed the Fig. 5 time axis against TDMA tails)
+            round_time = len(devs) * cell.slot_seconds + dl_time
         else:
             budgets = rates * cell.bandwidth_hz * cell.slot_seconds
-            round_time = cell.slot_seconds + dl_time
+            # the shared NOMA uplink slot is only spent when someone
+            # transmits — empty T*K > M tail rounds cost downlink only
+            # (mirrors the TDMA per-device sub-slot accounting above)
+            uplink_time = cell.slot_seconds if devs else 0.0
+            round_time = uplink_time + dl_time
 
         deltas, bits_used, ratios, agg_w, norms = [], [], [], [], []
         for j, d in enumerate(devs):
@@ -306,7 +313,10 @@ def run_federated_learning(
                                    norms if norms else None)
 
         t_wall += round_time
-        acc = float(acc_fn(params, x_test, y_test)) if t % eval_every == 0 else logs[-1].test_accuracy
+        # the final round is always evaluated: accuracies()[-1] must measure
+        # the final model even when eval_every skips over num_rounds - 1
+        do_eval = t % eval_every == 0 or t == cfg.num_rounds - 1
+        acc = float(acc_fn(params, x_test, y_test)) if do_eval else logs[-1].test_accuracy
         log = RoundLog(t, tuple(devs), np.asarray(rates), np.asarray(bits_used),
                        np.asarray(ratios), acc, t_wall)
         logs.append(log)

@@ -79,17 +79,25 @@ produce identical schedules on instances where the literal graph fits.
 
 Backends: ``lazy_greedy_schedule(backend="numpy")`` (default) walks rounds in
 Python and scores each round's candidate batch with the numpy engine;
-``backend="jax"`` runs the whole per-step argmax on device
-(``repro.core.rates_jax.greedy_step``): the C(pool, K) subset enumeration is
-built once as *positions* into a per-round candidate pool, and every greedy
-step is a single jitted call that re-masks availability, re-ranks the pools,
-scores the full (T, V, K) vertex tensor, and returns the argmax vertex.  The
-two backends produce bit-identical schedules (same stable tie-breaking:
-earliest round, lexicographically-first subset, ties in the pool ranking to
-the lower device id); leftover tail groups smaller than K fall back to the
-host path.  Power refinement with ``power_mode="mapel"`` is batched over all
-selected groups at the end (``power.mapel_batched``) instead of solved
-round-by-round.
+``backend="jax"`` runs the **entire** selection loop on device as one jitted
+``lax.while_loop`` (``repro.core.rates_jax.greedy_rounds_fused``): the
+C(pool, K) subset enumeration is built once as *positions* into a per-round
+candidate pool, the loop carries ``(step, feasible, avail, done, assign)``
+on device, every iteration re-masks availability, re-ranks the pools, scores
+the full (T, V, K) vertex tensor, and writes the argmax vertex into the
+(T, K) assignment tensor, and the host syncs exactly once per schedule.
+Two fused-backend switches: ``scorer="xla" | "pallas"`` picks the vertex
+scorer (XLA comparison-matrix vs the Pallas SIC kernel of
+``repro.kernels.sic_rates``) and ``shards=N`` shards the subset axis over N
+local devices via ``shard_map`` with an in-mesh argmax reduction
+(``repro.sharding.vertex``).  ``backend="jax-stepwise"`` keeps the previous
+driver — one jitted ``greedy_step`` call (and one host sync) per greedy
+step.  All backends produce bit-identical schedules (same stable
+tie-breaking: earliest round, lexicographically-first subset, ties in the
+pool ranking to the lower device id); leftover tail groups smaller than K
+fall back to the host path.  Power refinement with ``power_mode="mapel"``
+is batched over all selected groups at the end (``power.mapel_batched``)
+instead of solved round-by-round.
 """
 from __future__ import annotations
 
@@ -107,9 +115,11 @@ PowerFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
 # (gains_VK, weights_VK) -> powers_VK for vectorized candidate scoring.
 # ``power.PowerAllocator`` satisfies this interface.
 
-SCHEDULER_BACKENDS = ("numpy", "jax")
+SCHEDULER_BACKENDS = ("numpy", "jax", "jax-stepwise")
 # the lazy greedy's drivers (_lazy_gwmin_rounds); FLConfig validates
-# ``scheduler_backend`` against this same tuple.
+# ``scheduler_backend`` against this same tuple.  "jax" is the fused
+# while_loop driver (one host sync per schedule); "jax-stepwise" keeps the
+# one-jitted-call-per-greedy-step driver for comparison and benchmarks.
 
 
 # --------------------------------------------------------------------------
@@ -472,18 +482,49 @@ def _greedy_rounds_numpy(
     return rounds
 
 
-def _greedy_rounds_jax(
+def _jax_greedy_inputs(gains_tm, weights_m, candidate_pool, k, pmax, noise_power):
+    """Shared prologue of both jax drivers: clamp the pool to M, enumerate
+    the C(pool, kk) subsets once as pool *positions* (lex order), and build
+    the pool-ranking proxy with the *host* engine so every backend ranks
+    candidate pools from identical float64 values."""
+    num_devices = gains_tm.shape[1]
+    pool = int(min(candidate_pool, num_devices))
+    kk = min(k, pool)
+    subs_pos = np.array(
+        list(itertools.combinations(range(pool), kk)), dtype=np.int32
+    ).reshape(-1, kk)
+    solo_tm = _solo_proxy(gains_tm, weights_m[None, :], pmax, noise_power)
+    return pool, kk, subs_pos, solo_tm
+
+
+def _jax_greedy_tail(
+    rounds, avail_np, done_np,
+    gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax,
+):
+    """Shared epilogue of both jax drivers: once fewer than K devices remain
+    (T*K > M horizons), the host loop finishes the leftover smaller groups —
+    the device enumeration is fixed-K, and those tail steps are
+    O(C(K-1, kk)) cheap."""
+    avail_host = set(np.flatnonzero(avail_np).tolist())
+    remaining_host = set(np.flatnonzero(~done_np).tolist())
+    if avail_host and remaining_host:
+        _greedy_rounds_numpy(
+            gains_tm, weights_m, k, search_fn, noise_power, candidate_pool,
+            pmax, rounds=rounds, avail=avail_host, remaining=remaining_host,
+        )
+    return rounds
+
+
+def _greedy_rounds_jax_stepwise(
     gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax
 ):
     """Device-path greedy selection: one jitted argmax call per step.
 
-    The C(pool, K) enumeration is built once as positions into the
-    per-round candidate pool; each step ``rates_jax.greedy_step`` re-masks
-    availability and scores the whole (T, V, K) vertex tensor on device.
-    Runs under x64 so scores (and therefore argmax tie-breaking) line up
-    with the float64 host path.  Once fewer than K devices remain (T*K > M
-    horizons), the host loop finishes the leftover smaller groups — the
-    enumeration is fixed-K, and those tail steps are O(C(K-1, kk)) cheap.
+    Each step ``rates_jax.greedy_step`` re-masks availability and scores the
+    whole (T, V, K) vertex tensor on device, but the loop itself walks on
+    the host — every step syncs the argmax scalars back (the fused driver
+    below removes exactly that).  Runs under x64 so scores (and therefore
+    argmax tie-breaking) line up with the float64 host path.
     """
     import jax
     import jax.numpy as jnp
@@ -491,14 +532,9 @@ def _greedy_rounds_jax(
     from repro.core import rates_jax
 
     num_rounds, num_devices = gains_tm.shape
-    pool = int(min(candidate_pool, num_devices))
-    kk = min(k, pool)
-    subs_pos = np.array(
-        list(itertools.combinations(range(pool), kk)), dtype=np.int32
-    ).reshape(-1, kk)
-    # Pool-ranking proxy, computed with the *host* engine so both backends
-    # rank candidate pools from identical float64 values.
-    solo_tm = _solo_proxy(gains_tm, weights_m[None, :], pmax, noise_power)
+    pool, kk, subs_pos, solo_tm = _jax_greedy_inputs(
+        gains_tm, weights_m, candidate_pool, k, pmax, noise_power
+    )
     rounds = [()] * num_rounds
     with jax.experimental.enable_x64():
         jg = jnp.asarray(gains_tm, jnp.float64)
@@ -521,14 +557,53 @@ def _greedy_rounds_jax(
             steps += 1
         avail_np = np.asarray(avail)
         done_np = np.asarray(done)
-        avail_host = set(np.flatnonzero(avail_np).tolist())
-        remaining_host = set(np.flatnonzero(~done_np).tolist())
-    if avail_host and remaining_host:
-        _greedy_rounds_numpy(
-            gains_tm, weights_m, k, search_fn, noise_power, candidate_pool,
-            pmax, rounds=rounds, avail=avail_host, remaining=remaining_host,
+    return _jax_greedy_tail(
+        rounds, avail_np, done_np,
+        gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax,
+    )
+
+
+def _greedy_rounds_jax_fused(
+    gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax,
+    *, scorer="xla", shards=None,
+):
+    """Device-path greedy selection, fully fused: the entire GWMIN loop runs
+    inside one jitted ``lax.while_loop`` (``rates_jax.greedy_rounds_fused``)
+    and the host syncs exactly once per schedule, pulling the (T, K)
+    assignment tensor plus the avail/done masks the T*K > M tail path
+    resumes from.  ``scorer`` picks the vertex scorer (XLA comparison-matrix
+    vs the Pallas SIC kernel); ``shards`` shards the subset axis over local
+    devices — see the ``rates_jax`` module docstring for both switches.
+    Runs under x64 so scores (and therefore argmax tie-breaking) line up
+    with the float64 host path.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import rates_jax
+
+    num_rounds, num_devices = gains_tm.shape
+    pool, kk, subs_pos, solo_tm = _jax_greedy_inputs(
+        gains_tm, weights_m, candidate_pool, k, pmax, noise_power
+    )
+    rounds = [()] * num_rounds
+    with jax.experimental.enable_x64():
+        assign, done, avail = rates_jax.greedy_rounds_fused(
+            jnp.asarray(gains_tm, jnp.float64),
+            jnp.asarray(weights_m, jnp.float64),
+            jnp.asarray(solo_tm, jnp.float64),
+            jnp.asarray(subs_pos),
+            pool=pool, pmax=float(pmax), noise_power=float(noise_power),
+            scorer=scorer, shards=shards,
         )
-    return rounds
+        # the one host sync per schedule
+        assign_np, done_np, avail_np = jax.device_get((assign, done, avail))
+    for t in np.flatnonzero(done_np):
+        rounds[t] = tuple(int(d) for d in assign_np[t])
+    return _jax_greedy_tail(
+        rounds, avail_np, done_np,
+        gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax,
+    )
 
 
 def lazy_greedy_schedule(
@@ -541,6 +616,8 @@ def lazy_greedy_schedule(
     noise_power=1e-13,
     candidate_pool=24,
     backend="numpy",
+    scorer="xla",
+    shards=None,
 ) -> Schedule:
     """Graph-free Algorithm 2 (see module docstring for the equivalence).
 
@@ -549,9 +626,14 @@ def lazy_greedy_schedule(
     candidates in one call, so pools of 24-64 are cheap (the seed's
     per-subset loop capped practical pools at ~16).
 
-    ``backend="jax"`` moves the per-step argmax itself onto the device path
-    (one jitted (T, V, K) scoring call per greedy step; see module
+    ``backend="jax"`` runs the whole selection loop on the device path as a
+    single fused ``lax.while_loop`` (one host sync per schedule; see module
     docstring) and produces bit-identical schedules; use it for M >> 300.
+    ``backend="jax-stepwise"`` keeps the one-jitted-call-per-greedy-step
+    driver it replaced (still bit-identical, syncs every step).  ``scorer``
+    and ``shards`` tune the fused backend only: the vertex scorer
+    ("xla" | "pallas" SIC kernel) and the number of local devices the
+    subset axis is sharded over (None = no shard_map).
 
     With power_mode="mapel" the subset *search* runs at max power and MAPEL
     refines only the selected groups — batched over all T groups in one
@@ -562,7 +644,8 @@ def lazy_greedy_schedule(
     power_fn = make_power_fn(power_mode, pmax, noise_power)
     rounds = _lazy_gwmin_rounds(
         gains_tm, weights_m, k, pmax=pmax, noise_power=noise_power,
-        candidate_pool=candidate_pool, backend=backend,
+        candidate_pool=candidate_pool, backend=backend, scorer=scorer,
+        shards=shards,
     )
     return finalize_schedule(
         rounds, gains_tm, weights_m, power_fn, noise_power, "lazy-gwmin"
@@ -570,7 +653,8 @@ def lazy_greedy_schedule(
 
 
 def _lazy_gwmin_rounds(
-    gains_tm, weights_m, k, *, pmax, noise_power, candidate_pool, backend
+    gains_tm, weights_m, k, *, pmax, noise_power, candidate_pool, backend,
+    scorer="xla", shards=None,
 ):
     """Selection step of the lazy greedy (the subset *search* runs at max
     power regardless of the finalization power mode — see
@@ -581,7 +665,12 @@ def _lazy_gwmin_rounds(
             gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax
         )
     if backend == "jax":
-        return _greedy_rounds_jax(
+        return _greedy_rounds_jax_fused(
+            gains_tm, weights_m, k, search_fn, noise_power, candidate_pool,
+            pmax, scorer=scorer, shards=shards,
+        )
+    if backend == "jax-stepwise":
+        return _greedy_rounds_jax_stepwise(
             gains_tm, weights_m, k, search_fn, noise_power, candidate_pool, pmax
         )
     raise ValueError(
@@ -756,7 +845,9 @@ class PolicyConfig:
     pmax: float = 0.01
     noise_power: float = 1e-13
     candidate_pool: int = 24        # lazy greedy enumeration bound
-    backend: str = "numpy"          # lazy greedy driver (numpy | jax)
+    backend: str = "numpy"          # lazy greedy driver (SCHEDULER_BACKENDS)
+    scorer: str = "xla"             # fused-backend vertex scorer (xla | pallas)
+    shards: "int | None" = None     # fused-backend vertex-axis device shards
     seed: int = 0
 
 
@@ -935,7 +1026,7 @@ class LazyGwminPolicy(_PrecomputedPolicy):
         return _lazy_gwmin_rounds(
             gains_tm, weights_m, cfg.group_size, pmax=cfg.pmax,
             noise_power=cfg.noise_power, candidate_pool=cfg.candidate_pool,
-            backend=cfg.backend,
+            backend=cfg.backend, scorer=cfg.scorer, shards=cfg.shards,
         )
 
 

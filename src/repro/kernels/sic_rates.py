@@ -68,6 +68,10 @@ def sic_weighted_rates_pallas(
             f"sic_weighted_rates_pallas supports NOMA groups of K <= {K_PAD} "
             f"(got K={k}); use the jnp reference path for larger groups"
         )
+    if v == 0:
+        # A grid of 0 blocks is illegal (padding can't grow an empty axis to
+        # BLOCK_V); an empty candidate batch scores to an empty result.
+        return jnp.zeros((0,), jnp.float32)
     rx = (powers_vk * gains_vk * gains_vk).astype(jnp.float32).T   # (K, V)
     w = weights_vk.astype(jnp.float32).T
     pad_v = (-v) % BLOCK_V

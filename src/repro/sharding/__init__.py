@@ -6,3 +6,9 @@ from repro.sharding.rules import (
     param_pspecs,
     translate,
 )
+from repro.sharding.vertex import (
+    VERTEX_AXIS,
+    max_vertex_shards,
+    pad_rows_to_multiple,
+    vertex_mesh,
+)

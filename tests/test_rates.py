@@ -104,6 +104,23 @@ def test_jax_paths_match_numpy_engine():
     np.testing.assert_allclose(got_pallas, got_ref, rtol=2e-5)
 
 
+def test_pallas_kernel_empty_candidate_batch():
+    """Regression: a V=0 candidate batch used to hit a 0-block pallas grid
+    (slice_sizes > operand shape); an empty batch scores to an empty (0,)
+    result, matching the numpy engine."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.sic_rates import sic_weighted_rates_pallas
+
+    out = sic_weighted_rates_pallas(
+        jnp.zeros((0, 3)), jnp.zeros((0, 3)), jnp.zeros((0, 3)), NOISE
+    )
+    assert out.shape == (0,)
+    want = rates.batched_weighted_rates(
+        np.zeros((0, 3)), np.zeros((0, 3)), np.zeros((0, 3)), NOISE
+    )
+    assert want.shape == (0,)
+
+
 # --------------------------------------------------------------------------
 # Scheduler equivalence: batched engine vs the seed's per-subset Python loop
 # --------------------------------------------------------------------------

@@ -79,29 +79,31 @@ def test_proportional_fair_empty_avail_regression():
 
 
 # --------------------------------------------------------------------------
-# backend="jax": device-resident greedy == numpy greedy, bit for bit
+# device backends: fused while_loop and step-wise greedy == numpy, bit for bit
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize(
-    "m,k,t,pool,seed",
-    [
-        (8, 2, 3, 24, 0),      # pool >= M: full enumeration
-        (12, 3, 3, 24, 1),
-        (32, 3, 4, 24, 2),     # proxy-ranked pool (M > pool)
-        (24, 3, 4, 8, 3),
-        (32, 2, 5, 8, 4),
-        (5, 2, 4, 24, 5),      # T*K > M: host tail path for leftover groups
-        (30, 3, 11, 8, 6),     # T*K > M with proxy pool
-    ],
-)
-def test_jax_backend_bit_identical(m, k, t, pool, seed):
+EDGE_GRID = [
+    (8, 2, 3, 24, 0),      # pool >= M: full enumeration
+    (12, 3, 3, 24, 1),
+    (32, 3, 4, 24, 2),     # proxy-ranked pool (M > pool)
+    (24, 3, 4, 8, 3),
+    (32, 2, 5, 8, 4),
+    (5, 2, 4, 24, 5),      # T*K > M: host tail path for leftover groups
+    (30, 3, 11, 8, 6),     # T*K > M with proxy pool
+    (10, 3, 3, 2, 7),      # pool < K: groups shrink to the pool size
+]
+
+
+@pytest.mark.parametrize("backend", ["jax", "jax-stepwise"])
+@pytest.mark.parametrize("m,k,t,pool,seed", EDGE_GRID)
+def test_jax_backend_bit_identical(m, k, t, pool, seed, backend):
     pytest.importorskip("jax")
     gains, w = _instance(m, t, seed)
     a = scheduling.lazy_greedy_schedule(
         gains, w, k, noise_power=NOISE, candidate_pool=pool
     )
     b = scheduling.lazy_greedy_schedule(
-        gains, w, k, noise_power=NOISE, candidate_pool=pool, backend="jax"
+        gains, w, k, noise_power=NOISE, candidate_pool=pool, backend=backend
     )
     assert a.rounds == b.rounds
     for pa, pb in zip(a.powers, b.powers):
@@ -112,7 +114,25 @@ def test_jax_backend_bit_identical(m, k, t, pool, seed):
     assert b.validate(m, k)
 
 
-def test_jax_backend_bit_identical_with_mapel_refinement():
+@pytest.mark.parametrize("m,k,t,pool,seed", EDGE_GRID)
+def test_fused_equals_stepwise_selection(m, k, t, pool, seed):
+    """The fused while_loop driver must walk the exact vertex sequence the
+    step-wise driver walks: identical rounds straight out of selection."""
+    pytest.importorskip("jax")
+    gains, w = _instance(m, t, seed)
+    fused = scheduling._lazy_gwmin_rounds(
+        gains, w, k, pmax=0.01, noise_power=NOISE, candidate_pool=pool,
+        backend="jax",
+    )
+    stepwise = scheduling._lazy_gwmin_rounds(
+        gains, w, k, pmax=0.01, noise_power=NOISE, candidate_pool=pool,
+        backend="jax-stepwise",
+    )
+    assert fused == stepwise
+
+
+@pytest.mark.parametrize("backend", ["jax", "jax-stepwise"])
+def test_jax_backend_bit_identical_with_mapel_refinement(backend):
     """Selection equality carries through the batched MAPEL finalization."""
     pytest.importorskip("jax")
     gains, w = _instance(10, 3, seed=11)
@@ -120,7 +140,7 @@ def test_jax_backend_bit_identical_with_mapel_refinement():
         gains, w, 2, power_mode="mapel", noise_power=NOISE
     )
     b = scheduling.lazy_greedy_schedule(
-        gains, w, 2, power_mode="mapel", noise_power=NOISE, backend="jax"
+        gains, w, 2, power_mode="mapel", noise_power=NOISE, backend=backend
     )
     assert a.rounds == b.rounds
     for pa, pb in zip(a.powers, b.powers):
@@ -134,3 +154,118 @@ def test_unknown_backend_raises():
         scheduling.lazy_greedy_schedule(
             gains, w, 2, noise_power=NOISE, backend="tpu-v9"
         )
+
+
+# --------------------------------------------------------------------------
+# fused-backend switches: pallas scorer and vertex-axis sharding
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,t,pool,seed", [
+    (20, 3, 4, 12, 9),
+    (32, 2, 5, 8, 4),
+    (5, 2, 4, 24, 5),      # T*K > M tail after the fused loop
+])
+def test_pallas_scorer_agrees_with_xla_scorer(m, k, t, pool, seed):
+    """The Pallas SIC kernel scorer accumulates in f32 (ULP-level score
+    differences vs the f64 XLA comparison-matrix), but the greedy argmax is
+    insensitive on non-degenerate instances: same schedules."""
+    pytest.importorskip("jax")
+    gains, w = _instance(m, t, seed)
+    a = scheduling.lazy_greedy_schedule(
+        gains, w, k, noise_power=NOISE, candidate_pool=pool, backend="jax",
+        scorer="xla",
+    )
+    b = scheduling.lazy_greedy_schedule(
+        gains, w, k, noise_power=NOISE, candidate_pool=pool, backend="jax",
+        scorer="pallas",
+    )
+    assert a.rounds == b.rounds
+    assert a.weighted_sum_rate == b.weighted_sum_rate
+
+
+def test_unknown_scorer_raises():
+    pytest.importorskip("jax")
+    gains, w = _instance(6, 2, seed=0)
+    with pytest.raises(ValueError, match="scorer"):
+        scheduling.lazy_greedy_schedule(
+            gains, w, 2, noise_power=NOISE, backend="jax", scorer="cuda"
+        )
+
+
+@pytest.mark.parametrize("shards", [1, 4])
+def test_sharded_fused_loop_bit_identical(shards):
+    """shard_map over the vertex axis (in-mesh argmax reduction) must not
+    change the schedule.  shards=1 exercises the collective code path on a
+    single-device mesh; shards above the local device count clamp (this
+    container has one CPU device — multi-shard equality is additionally
+    pinned by the forced-host-device run in CI-less environments via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count``)."""
+    pytest.importorskip("jax")
+    gains, w = _instance(24, 4, seed=12)
+    a = scheduling.lazy_greedy_schedule(
+        gains, w, 3, noise_power=NOISE, candidate_pool=10
+    )
+    b = scheduling.lazy_greedy_schedule(
+        gains, w, 3, noise_power=NOISE, candidate_pool=10, backend="jax",
+        shards=shards,
+    )
+    assert a.rounds == b.rounds
+    assert a.weighted_sum_rate == b.weighted_sum_rate
+
+
+# --------------------------------------------------------------------------
+# degenerate batch shapes: greedy_step pool > M must match the host clamp
+# --------------------------------------------------------------------------
+
+def test_greedy_step_clamps_candidate_pool_beyond_m():
+    """Regression: calling the jitted ``greedy_step`` directly with
+    pool > M used to be a broadcast-shape crash; the host driver clamps the
+    pool to M, and the jitted path must behave identically."""
+    jax = pytest.importorskip("jax")
+    import itertools
+
+    import jax.numpy as jnp
+
+    from repro.core import rates_jax
+
+    m, t, pool = 6, 3, 16
+    gains, w = _instance(m, t, seed=0)
+    solo = w * np.log2(1.0 + (0.01 * gains**2) / NOISE)
+    with jax.experimental.enable_x64():
+        jg = jnp.asarray(gains, jnp.float64)
+        jw = jnp.asarray(w, jnp.float64)
+        jsolo = jnp.asarray(solo, jnp.float64)
+        avail = jnp.ones(m, bool)
+        done = jnp.zeros(t, bool)
+        subs = jnp.asarray(np.array(
+            list(itertools.combinations(range(m), 2)), np.int32))
+        big = rates_jax.greedy_step(
+            jg, jw, jsolo, subs, avail, done,
+            pool=pool, pmax=0.01, noise_power=NOISE)
+        ref = rates_jax.greedy_step(
+            jg, jw, jsolo, subs, avail, done,
+            pool=m, pmax=0.01, noise_power=NOISE)
+        assert float(big[0]) == float(ref[0])
+        assert int(big[1]) == int(ref[1])
+        np.testing.assert_array_equal(np.asarray(big[2]), np.asarray(ref[2]))
+        # a naive caller enumerating positions over the unclamped pool gets
+        # the out-of-range subsets masked infeasible, not a crash
+        subs_naive = jnp.asarray(np.array(
+            list(itertools.combinations(range(pool), 2)), np.int32))
+        naive = rates_jax.greedy_step(
+            jg, jw, jsolo, subs_naive, avail, done,
+            pool=pool, pmax=0.01, noise_power=NOISE)
+        assert float(naive[0]) == float(ref[0])
+        np.testing.assert_array_equal(np.asarray(naive[2]), np.asarray(ref[2]))
+
+
+def test_lazy_greedy_pool_beyond_m_matches_exact_pool():
+    """End-to-end: candidate_pool > M is the full-cell enumeration."""
+    gains, w = _instance(7, 3, seed=2)
+    a = scheduling.lazy_greedy_schedule(
+        gains, w, 2, noise_power=NOISE, candidate_pool=100, backend="jax"
+    )
+    b = scheduling.lazy_greedy_schedule(
+        gains, w, 2, noise_power=NOISE, candidate_pool=7
+    )
+    assert a.rounds == b.rounds

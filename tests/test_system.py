@@ -119,6 +119,70 @@ def test_fl_survives_empty_tail_rounds(tiny_world, uplink, scheduler):
     assert res.logs[-1].test_accuracy == res.logs[-2].test_accuracy
 
 
+def test_final_round_eval_fresh_when_eval_every_skips_it(tiny_world):
+    """Regression: with eval_every > 1 and num_rounds - 1 not a multiple,
+    the final round used to copy the last (stale) eval instead of measuring
+    the final model — FLResult.accuracies()[-1] lied about the run's
+    outcome.  The last round must always be evaluated."""
+    ds, cell, shards = tiny_world
+    from repro.models import lenet
+
+    cfg = FLConfig(num_devices=4, group_size=2, num_rounds=4,
+                   scheduler="age-fair", power_mode="max",
+                   compression="adaptive", seed=0)
+    res = fl.run_federated_learning(ds, shards, cell, cfg, eval_every=2)
+    fresh = float(lenet.accuracy(
+        res.final_params, np.asarray(ds.x_test), np.asarray(ds.y_test)))
+    assert res.logs[-1].test_accuracy == fresh
+    # intermediate skipped rounds still carry the previous eval forward
+    assert res.logs[1].test_accuracy == res.logs[0].test_accuracy
+
+
+def test_tdma_empty_tail_round_charges_no_uplink_airtime(tiny_world):
+    """Regression: an empty T*K > M tail round under TDMA used to charge
+    group_size * slot_seconds of uplink airtime with zero transmitting
+    devices, skewing the Fig. 5 time axis.  Airtime is len(devs) sub-slots."""
+    ds, cell, shards = tiny_world
+    cfg = FLConfig(num_devices=4, group_size=2, num_rounds=3,
+                   scheduler="round-robin", power_mode="max",
+                   compression="adaptive", seed=0)
+    res = fl.run_federated_learning(ds, shards, cell, cfg, uplink="tdma")
+    assert res.logs[-1].devices == ()
+    per_round = np.diff(np.concatenate([[0.0], res.times()]))
+    # full rounds: 2 sub-slots + downlink; empty tail: downlink only
+    np.testing.assert_allclose(
+        per_round[-1], per_round[0] - 2 * cell.slot_seconds, rtol=1e-9)
+
+
+def test_noma_empty_tail_round_charges_no_uplink_airtime(tiny_world):
+    """The shared NOMA uplink slot is only spent when someone transmits: an
+    empty tail round costs the downlink broadcast only (keeping the NOMA
+    and TDMA time axes consistent on empty rounds)."""
+    ds, cell, shards = tiny_world
+    cfg = FLConfig(num_devices=4, group_size=2, num_rounds=3,
+                   scheduler="round-robin", power_mode="max",
+                   compression="adaptive", seed=0)
+    res = fl.run_federated_learning(ds, shards, cell, cfg, uplink="noma")
+    assert res.logs[-1].devices == ()
+    per_round = np.diff(np.concatenate([[0.0], res.times()]))
+    np.testing.assert_allclose(
+        per_round[-1], per_round[0] - cell.slot_seconds, rtol=1e-9)
+
+
+def test_tdma_partial_tail_round_charges_len_devs_subslots(tiny_world):
+    """A partial tail group (1 of K=3 devices left) is charged 1 sub-slot,
+    not K."""
+    ds, cell, shards = tiny_world
+    cfg = FLConfig(num_devices=4, group_size=3, num_rounds=2,
+                   scheduler="round-robin", power_mode="max",
+                   compression="adaptive", seed=0)
+    res = fl.run_federated_learning(ds, shards, cell, cfg, uplink="tdma")
+    assert len(res.logs[0].devices) == 3 and len(res.logs[1].devices) == 1
+    per_round = np.diff(np.concatenate([[0.0], res.times()]))
+    np.testing.assert_allclose(
+        per_round[1], per_round[0] - 2 * cell.slot_seconds, rtol=1e-9)
+
+
 def test_scheduler_weighted_rate_ordering(small_world):
     """Greedy MWIS schedule achieves >= weighted sum rate of random/RR."""
     ds, cell, shards = small_world
