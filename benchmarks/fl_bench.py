@@ -1,0 +1,91 @@
+"""FL round-engine benchmark: legacy per-device loop vs batched engine.
+
+Measures the steady-state **round-loop** time of ``fl.run_federated_learning``
+(median per-round wall time from the progress callbacks, so setup —
+channel sampling, scheduling, ClientBank build, jit compilation — is
+excluded) for ``fl_engine in {legacy, batched}`` over the K x M sweep the
+batched engine exists for.  ``benchmarks/run.py`` persists the records to
+``BENCH_fl.json`` (``BENCH_fl_fast.json`` under --fast/--smoke) so the
+round-loop speedup is tracked from PR to PR.
+
+Settings: round-robin scheduling (cheap, deterministic, K devices every
+round), max power, adaptive compression, NOMA uplink — the round body is
+the only thing that differs between the two engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gc
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import FLConfig
+from repro.core import channel, fl
+from repro.data import dirichlet_partition, make_mnist_like
+
+
+def _per_round_seconds(ds, shards, cell, cfg, *, passes: int = 2):
+    """Median steady-state round time: warm-compile run, then measure the
+    deltas between progress callbacks (covers rounds 1..R-1; setup and the
+    round-0 tail of compilation land before the first delta).  Best of
+    ``passes`` timed runs, so a background hiccup in one pass does not
+    poison the record."""
+    fl.run_federated_learning(ds, shards, cell, cfg, eval_every=10**9)
+    best = np.inf
+    for _ in range(passes):
+        ts = []
+        fl.run_federated_learning(
+            ds, shards, cell, cfg, eval_every=10**9,
+            progress=lambda log: ts.append(time.perf_counter()),
+        )
+        best = min(best, float(np.median(np.diff(ts))))
+    return best
+
+
+def main(fast: bool = False) -> dict:
+    if fast:
+        cases = [(60, 3)]
+        rounds, samples = 4, 1500
+    else:
+        cases = [(m, k) for m in (300, 1000) for k in (3, 8, 16)]
+        rounds, samples = 6, 12_000
+    records = []
+    for m, k in cases:
+        gc.collect()   # drop the previous case's dataset + ClientBank now
+        ds = make_mnist_like(num_samples=samples, seed=0)
+        cell = channel.CellConfig(num_devices=m)
+        shards = dirichlet_partition(ds.y_train, m, seed=0)
+        cfg = FLConfig(
+            num_devices=m, group_size=k, num_rounds=rounds,
+            scheduler="round-robin", power_mode="max",
+            compression="adaptive", seed=0,
+        )
+        legacy_s = _per_round_seconds(ds, shards, cell, cfg)
+        batched_s = _per_round_seconds(
+            ds, shards, cell, dataclasses.replace(cfg, fl_engine="batched")
+        )
+        speedup = legacy_s / batched_s
+        records.append({
+            "m": m, "k": k, "rounds": rounds,
+            "legacy_s_per_round": legacy_s,
+            "batched_s_per_round": batched_s,
+            "speedup": round(speedup, 2),
+        })
+        emit(f"fl.round_legacy_M{m}_K{k}", legacy_s * 1e6)
+        emit(f"fl.round_batched_M{m}_K{k}", batched_s * 1e6,
+             f"speedup {speedup:.1f}x")
+    return {
+        "suite": "fl_engine_round_loop",
+        "settings": {
+            "scheduler": "round-robin", "power_mode": "max",
+            "compression": "adaptive", "uplink": "noma",
+            "rounds": rounds, "num_samples": samples,
+        },
+        "records": records,
+    }
+
+
+if __name__ == "__main__":
+    main()

@@ -7,10 +7,11 @@ suites (fig5/fig6) plus the roofline sweep, so the job finishes in minutes
 while still exercising the power, scheduling, kernel, and compression paths.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
-The scheduling suite additionally returns backend-sweep records that are
-persisted to ``BENCH_scheduling.json`` at the repo root (M sweep x
-numpy/jax backend, wall-clock per schedule) so the scheduler perf
-trajectory is tracked from PR to PR.
+The scheduling and fl_engine suites additionally return sweep records that
+are persisted at the repo root (``BENCH_scheduling.json``: M sweep x
+numpy/jax scheduler backend; ``BENCH_fl.json``: K x M round-loop sweep,
+legacy vs batched FL engine) so both perf trajectories are tracked from
+PR to PR.
 """
 from __future__ import annotations
 
@@ -25,14 +26,22 @@ SUITES = [
     ("scheduling", "benchmarks.scheduling_bench"), # §III-A/B Algorithm 2
     ("kernels", "benchmarks.kernel_bench"),        # §II-B codec hot-spot
     ("compression", "benchmarks.compression_stats"),  # §II-B adaptive bits
+    ("fl_engine", "benchmarks.fl_bench"),          # legacy vs batched round loop
     ("fig5", "benchmarks.fig5_noma_vs_tdma"),      # Fig. 5
     ("fig6", "benchmarks.fig6_schemes"),           # Fig. 6
     ("roofline", "benchmarks.roofline_bench"),     # EXPERIMENTS §Roofline
 ]
 
 # FL-training suites (minutes even at --fast) and the roofline sweep are out
-# of scope for the CI smoke job.
+# of scope for the CI smoke job.  fl_engine stays in: its --fast case is one
+# tiny cell (M=60, 4 rounds) and it is the smoke signal for the batched
+# round engine regressing against the legacy oracle's wall-clock.
 SMOKE_SKIP = {"fig5", "fig6", "roofline"}
+
+# Suites whose main() returns a dict of records persisted at the repo root
+# (suffixed _fast under --fast/--smoke so the tracked full-sweep record is
+# never clobbered by a small run).
+PERSIST = {"scheduling": "BENCH_scheduling", "fl_engine": "BENCH_fl"}
 
 
 def main() -> None:
@@ -55,12 +64,10 @@ def main() -> None:
         print(f"# === {name} ({module}) ===", flush=True)
         try:
             result = importlib.import_module(module).main(fast=fast)
-            if name == "scheduling" and isinstance(result, dict):
-                # --fast runs a single small-M case; don't clobber the
-                # tracked full-sweep record with it.
+            if name in PERSIST and isinstance(result, dict):
                 suffix = "_fast" if fast else ""
                 out = pathlib.Path(__file__).resolve().parent.parent / (
-                    f"BENCH_scheduling{suffix}.json"
+                    f"{PERSIST[name]}{suffix}.json"
                 )
                 out.write_text(json.dumps(result, indent=2) + "\n")
                 print(f"# wrote {out}", flush=True)

@@ -3,7 +3,8 @@ K=3 per round, T=35 rounds, LeNet-300-100, non-iid data — reproducing the
 Fig. 5 / Fig. 6 settings.
 
     PYTHONPATH=src python examples/fl_noma_mnist.py [--fast] \
-        [--scheduler NAME] [--power mapel|max] [--uplink noma|tdma]
+        [--scheduler NAME] [--power mapel|max] [--uplink noma|tdma] \
+        [--engine batched|legacy] [--pallas-agg]
 
 ``--scheduler`` accepts any registered policy name (see
 ``repro.core.scheduling``): the paper's precomputed schedulers
@@ -12,7 +13,17 @@ the online FL-state-aware policies (update-aware, age-fair), which are
 selected round by round inside the training loop from the previous
 rounds' update norms / ages.
 
-Takes ~10-20 min at full scale on this CPU; --fast runs M=60, T=10.
+``--engine`` picks the round-body engine (``FLConfig.fl_engine``):
+``batched`` (default here) runs each round as one jitted dispatch over a
+device-resident ClientBank — several times faster per round (see
+BENCH_fl.json) and equal to the legacy loop to f32 tolerance;
+``legacy`` is the per-device oracle loop.  ``--pallas-agg`` sets
+``FLConfig.use_pallas``: the batched engine then aggregates through the
+fused dequant+aggregate Pallas kernel instead of the XLA einsum
+(interpret mode on CPU, Mosaic on TPU).
+
+Takes ~10-20 min at full scale on this CPU (legacy engine; the batched
+engine cuts the round-loop time severalfold); --fast runs M=60, T=10.
 """
 import argparse
 
@@ -31,6 +42,9 @@ def main():
     ap.add_argument("--power", default="mapel")
     ap.add_argument("--uplink", default="noma")
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--engine", default="batched", choices=["legacy", "batched"])
+    ap.add_argument("--pallas-agg", action="store_true",
+                    help="batched engine: aggregate via the Pallas kernel")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -44,11 +58,13 @@ def main():
     cfg = FLConfig(num_devices=m, group_size=3, num_rounds=t,
                    learning_rate=0.01, batch_size=10,   # Table I
                    scheduler=args.scheduler, power_mode=args.power,
-                   compression="adaptive", seed=args.seed)
+                   compression="adaptive", fl_engine=args.engine,
+                   use_pallas=args.pallas_agg, seed=args.seed)
 
     online = scheduling.get_policy(args.scheduler).online
     print(f"M={m} K=3 T={t} scheduler={args.scheduler} power={args.power} "
-          f"uplink={args.uplink} mode={'online (live)' if online else 'precomputed'}")
+          f"uplink={args.uplink} engine={args.engine} "
+          f"mode={'online (live)' if online else 'precomputed'}")
     res = fl.run_federated_learning(
         ds, shards, cell, cfg, uplink=args.uplink,
         progress=lambda log: print(

@@ -170,6 +170,13 @@ class FLConfig:
     power_mode: str = "mapel"        # mapel | max
     compression: str = "adaptive"    # adaptive | none
     paper_exact_range: bool = False  # DoReFa fixed [-1,1] range (Eq. 7)
+    fl_engine: str = "legacy"        # legacy (per-device host loop, the
+                                     # oracle) | batched (one jitted dispatch
+                                     # per round over a device-resident
+                                     # ClientBank; use for large M/K sweeps)
+    use_pallas: bool = False         # batched engine only: aggregate through
+                                     # the fused dequant+aggregate Pallas
+                                     # kernel instead of the XLA einsum
     seed: int = 0
 
     def __post_init__(self):
@@ -205,4 +212,11 @@ class FLConfig:
             raise ValueError(
                 f"unknown scheduler_backend {self.scheduler_backend!r}; "
                 f"known: {scheduling.SCHEDULER_BACKENDS}"
+            )
+        from repro.core import fl_engine
+
+        if self.fl_engine not in fl_engine.ENGINES:
+            raise ValueError(
+                f"unknown fl_engine {self.fl_engine!r}; "
+                f"known: {fl_engine.ENGINES}"
             )

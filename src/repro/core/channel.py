@@ -17,6 +17,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Speed of light (m/s).
 _C = 299_792_458.0
@@ -93,13 +94,29 @@ def sample_round_channels(
 
 def downlink_time_seconds(
     model_bits: float, gains: jax.Array, cfg: CellConfig
-) -> jax.Array:
+) -> float:
     """Broadcast time T_d = max_k I / (B_d log2(1 + p_d * gamma_k)) (paper §IV).
 
-    gamma_k is the received downlink SNR at device k.
+    gamma_k is the received downlink SNR at device k.  Computed in float64
+    like the uplink rate engine: squaring a far device's gain under a high
+    ``path_loss_exp`` underflows float32, and ``log1p`` keeps the rate
+    nonzero for SNRs below the 1 + x rounding threshold — either failure
+    used to return ``inf`` and silently poison the Fig. 5 time axis.  A
+    genuinely unreachable device (zero gain) raises instead.
     """
     n0_w_per_hz = 10.0 ** (cfg.noise_dbm_per_hz / 10.0) * 1e-3
     noise = n0_w_per_hz * cfg.downlink_bandwidth_hz
-    snr = cfg.downlink_power_w * gains.astype(jnp.float32) ** 2 / noise
-    rate = cfg.downlink_bandwidth_hz * jnp.log2(1.0 + snr)
-    return jnp.max(model_bits / rate)
+    g = np.asarray(gains, np.float64)
+    snr = cfg.downlink_power_w * g * g / noise
+    if not np.all(np.isfinite(snr)):
+        raise ValueError(
+            "non-finite downlink SNR: some channel gain is NaN/inf; check "
+            "the upstream gain computation"
+        )
+    if not np.all(snr > 0.0):
+        raise ValueError(
+            "zero downlink SNR: some device has zero channel gain, so the "
+            "broadcast never completes (T_d = inf); check the cell geometry"
+        )
+    rate = cfg.downlink_bandwidth_hz * np.log1p(snr) / np.log(2.0)
+    return float(np.max(model_bits / rate))

@@ -64,7 +64,13 @@ def decode_tree(enc: EncodedTree, *, use_pallas: bool = False):
 
 
 def encode_decode_tree(tree, bits, *, paper_exact: bool = False):
-    """Fused quantize->dequantize of a pytree (traceable, ``bits`` may be traced)."""
+    """Fused quantize->dequantize of a pytree (traceable).
+
+    ``bits`` may be a traced scalar, or a (K,) vector (traced or not) when
+    every leaf carries a leading client axis of length K — the batched FL
+    engine quantizes all K scheduled clients' deltas to their own adaptive
+    bit-widths in one dispatch this way (see ``quantization.quantize_tree``).
+    """
     return q.quantize_tree(tree, bits, paper_exact=paper_exact)
 
 

@@ -23,6 +23,29 @@ Faithful paper-scale FedAvg over the simulated NOMA cell:
        on the paper's line-10 notation).
   Timing: NOMA round = t_slot + T_d; TDMA round = K * t_slot + T_d (§IV).
 
+Two round-body engines implement steps 3-5, selected by
+``FLConfig.fl_engine`` (this module owns the driver — scheduling, power,
+budgets, timing, and logging are computed once and shared by both):
+
+  * ``"legacy"`` — :func:`_legacy_round`: one host-level ``local_update``
+    per scheduled device (K shard uploads + K jitted scans + K eager
+    quantize passes + host ``tree_map`` aggregation per round).  Simple,
+    transparent, and kept as the **oracle** the batched engine is pinned
+    against (``tests/test_fl_engine.py``).
+  * ``"batched"`` — :class:`repro.core.fl_engine.BatchedRoundEngine`: all
+    M shards live on device in a ``ClientBank`` and the whole round body
+    (K-row gather -> vmapped local SGD -> batched norms -> traced
+    per-client adaptive quantization -> weighted aggregation) is **one
+    jitted dispatch**.  Aggregation uses an XLA einsum by default or the
+    fused dequant+aggregate Pallas kernel under ``FLConfig.use_pallas``.
+    Same schedules, same bit-widths, accuracies equal to f32 tolerance;
+    use it for large-M / large-K sweeps (BENCH_fl.json tracks the
+    round-loop speedup).
+
+The per-client SGD math itself lives in one place —
+``fl_engine.sgd_epoch`` — which the legacy path jits per device and the
+batched engine vmaps over the client axis.
+
 The LLM-scale integration of the same compression lives in
 repro/launch/train.py (quantized-DSGD inside the pjit'd step).
 """
@@ -38,7 +61,7 @@ import numpy as np
 
 from repro.config import FLConfig
 from repro.core import channel as chan
-from repro.core import compression, noma, scheduling
+from repro.core import compression, fl_engine, noma, scheduling
 from repro.core import power as power_lib
 from repro.core import quantization as qlib
 from repro.models import lenet
@@ -73,26 +96,10 @@ class FLResult:
 # Local training (LeNet on device shards)
 # --------------------------------------------------------------------------
 
-@jax.jit
-def _sgd_epoch(params, x, y, lr):
-    """One pass of minibatch SGD over a device's (padded) shard."""
-
-    def step(p, batch):
-        bx, by, valid = batch
-
-        def masked_loss(p_):
-            logits = lenet.forward(p_, bx)
-            logz = jax.nn.logsumexp(logits, axis=-1)
-            gold = jnp.take_along_axis(logits, by[:, None], axis=-1)[:, 0]
-            per = (logz - gold) * valid
-            return jnp.sum(per) / jnp.maximum(jnp.sum(valid), 1.0)
-
-        g = jax.grad(masked_loss)(p)
-        new = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
-        return new, None
-
-    out, _ = jax.lax.scan(step, params, (x, y, (y >= 0).astype(jnp.float32)))
-    return out
+# One jitted epoch per device — the same per-client math the batched engine
+# vmaps; the single implementation lives in fl_engine.sgd_epoch (``unroll``
+# is a scan parameter, hence static under jit).
+_sgd_epoch = jax.jit(fl_engine.sgd_epoch, static_argnames="unroll")
 
 
 def local_update(params, xs, ys, cfg: FLConfig):
@@ -109,6 +116,53 @@ def local_update(params, xs, ys, cfg: FLConfig):
     for _ in range(cfg.local_epochs):
         new = _sgd_epoch(new, xb, yb, cfg.learning_rate)
     return jax.tree_util.tree_map(lambda a, b: a - b, new, params)
+
+
+def _legacy_round(
+    params, devs, budgets, agg_w, dataset, shards, cfg: FLConfig, payload,
+    *, need_norms: bool,
+):
+    """The per-device host round body (steps 3-5), kept as the oracle.
+
+    One ``local_update`` + quantize pass per scheduled device, host
+    ``tree_map`` aggregation.  Returns ``(params, bits_used, ratios,
+    norms)`` — the same contract as ``BatchedRoundEngine.run_round``.
+    """
+    deltas, bits_used, ratios, norms = [], [], [], []
+    for j, d in enumerate(devs):
+        idx = shards[d]
+        delta = local_update(params, dataset.x_train[idx], dataset.y_train[idx], cfg)
+        if need_norms:
+            # the policies' norm signal is the raw local update, taken
+            # before quantization (Amiri et al. rank by what the device
+            # computed, not by what the channel let through); policies
+            # that never read obs.update_norms skip the per-device
+            # reduction + host sync entirely
+            norms.append(_tree_l2(delta))
+        if cfg.compression == "adaptive":
+            # NOMA: SIC rate over the shared slot; TDMA: interference-free
+            # rate over the device's own sub-slot. Both budgets are in
+            # ``budgets`` — quantizing only the NOMA uplink would bias
+            # the Fig. 5 comparison in TDMA's favour.
+            b = int(qlib.adaptive_bits(payload, budgets[j]))
+            delta = compression.encode_decode_tree(
+                delta, b, paper_exact=cfg.paper_exact_range
+            )
+            bits_used.append(b)
+            ratios.append(float(qlib.compression_ratio(payload, budgets[j])))
+        else:
+            bits_used.append(32)
+            ratios.append(1.0)
+        deltas.append(delta)
+
+    if deltas:
+        update = jax.tree_util.tree_map(
+            lambda *ds: sum(w * d for w, d in zip(agg_w, ds)), *deltas
+        )
+        params = jax.tree_util.tree_map(lambda p, u: p + u, params, update)
+    # else: empty round (T*K > M schedules legitimately produce empty
+    # tail groups) — no uplink, no aggregation.
+    return params, bits_used, ratios, norms
 
 
 # --------------------------------------------------------------------------
@@ -187,6 +241,13 @@ def run_federated_learning(
 
     sizes = np.array([len(s) for s in shards], dtype=np.float64)
     weights = sizes / sizes.sum()
+
+    # Round-body engine: "batched" folds steps 3-5 into one jitted dispatch
+    # per round over a device-resident ClientBank; None selects the legacy
+    # per-device host loop (the oracle — see module docstring).
+    engine = None
+    if cfg.fl_engine == "batched":
+        engine = fl_engine.BatchedRoundEngine(dataset, shards, cfg, payload)
 
     # channel realizations for the whole horizon
     dist = chan.sample_positions(jax.random.fold_in(key, 1), cell)
@@ -268,43 +329,23 @@ def run_federated_learning(
             uplink_time = cell.slot_seconds if devs else 0.0
             round_time = uplink_time + dl_time
 
-        deltas, bits_used, ratios, agg_w, norms = [], [], [], [], []
-        for j, d in enumerate(devs):
-            idx = shards[d]
-            delta = local_update(params, dataset.x_train[idx], dataset.y_train[idx], cfg)
-            if policy is not None and getattr(policy, "needs_norms", True):
-                # the policies' norm signal is the raw local update, taken
-                # before quantization (Amiri et al. rank by what the device
-                # computed, not by what the channel let through); policies
-                # that never read obs.update_norms skip the per-device
-                # reduction + host sync entirely
-                norms.append(_tree_l2(delta))
-            if cfg.compression == "adaptive":
-                # NOMA: SIC rate over the shared slot; TDMA: interference-free
-                # rate over the device's own sub-slot. Both budgets are in
-                # ``budgets`` — quantizing only the NOMA uplink would bias
-                # the Fig. 5 comparison in TDMA's favour.
-                b = int(qlib.adaptive_bits(payload, budgets[j]))
-                delta = compression.encode_decode_tree(
-                    delta, b, paper_exact=cfg.paper_exact_range
-                )
-                bits_used.append(b)
-                ratios.append(float(qlib.compression_ratio(payload, budgets[j])))
-            else:
-                bits_used.append(32)
-                ratios.append(1.0)
-            deltas.append(delta)
-            agg_w.append(sizes[d])
-
-        if deltas:
-            agg_w = np.asarray(agg_w) / max(sum(agg_w), 1.0)
-            update = jax.tree_util.tree_map(
-                lambda *ds: sum(w * d for w, d in zip(agg_w, ds)), *deltas
+        # FedAvg weights w_k = |D_k| / sum_selected |D_k| — computed here so
+        # both engines aggregate with identical host-float64 values
+        raw_w = [sizes[d] for d in devs]
+        agg_w = np.asarray(raw_w) / max(sum(raw_w), 1.0)
+        need_norms = policy is not None and getattr(policy, "needs_norms", True)
+        if engine is not None:
+            params, bits_used, ratios, norms = engine.run_round(
+                params, devs, budgets, agg_w, need_norms=need_norms
             )
-            params = jax.tree_util.tree_map(lambda p, u: p + u, params, update)
-        # else: empty round (T*K > M schedules legitimately produce empty
-        # tail groups) — no uplink, no aggregation; the wall clock still
-        # advances and the round is still logged below.
+        else:
+            params, bits_used, ratios, norms = _legacy_round(
+                params, devs, budgets, agg_w, dataset, shards, cfg, payload,
+                need_norms=need_norms,
+            )
+        # empty rounds (T*K > M schedules legitimately produce empty tail
+        # groups) train/aggregate nothing; the wall clock still advances and
+        # the round is still logged below.
 
         if policy is not None:
             # feed realized norms/rates back for the next select_round

@@ -1,0 +1,278 @@
+"""Batched FL round engine: one jitted dispatch per round (Algorithm 1).
+
+The legacy round body in :mod:`repro.core.fl` runs one host-level
+``local_update`` per scheduled device per round — K separate shard uploads,
+K jitted SGD scans, K eager quantize passes, and a host ``tree_map``
+aggregation — so simulation wall-clock is dominated by dispatch and scales
+linearly in K.  This engine (``FLConfig.fl_engine = "batched"``) folds the
+whole round body into a single jitted step over a device-resident
+:class:`repro.data.client_bank.ClientBank`:
+
+  1. **gather** — the round's K shards are a K-row gather of the bank's
+     (M, n_batches, bs, D) tensors; no host round-trips.
+  2. **local SGD** — ``vmap`` over the client axis of the same
+     ``lax.scan`` epoch the legacy loop jits (:func:`sgd_epoch` is shared,
+     so the per-client math is identical), producing all K deltas in one
+     dispatch; the update-aware policies' ||delta||_2 signal becomes one
+     batched reduction.
+  3. **adaptive quantization** — per-client bit-widths are *traced*
+     (``quantization.adaptive_bits`` on the (K,) budget vector, bit-identical
+     to the legacy host ints) and the whole delta stack is DoReFa-quantized
+     in the same jit via ``quantization.quantize_tree``'s (K,) bits mode.
+  4. **aggregation** — the weighted FedAvg sum flows through an XLA einsum
+     by default, or (``FLConfig.use_pallas``) through the fused
+     dequant+aggregate Pallas kernel
+     ``repro.kernels.aggregate.weighted_aggregate_pallas`` with per-client
+     levels (interpret mode on CPU, Mosaic on TPU).
+
+Scheduling, power allocation, rate/budget computation, timing, and logging
+stay in the :mod:`repro.core.fl` driver and are shared with the legacy
+engine, so both engines consume identical schedules, budgets and bit-widths.
+(One caveat: for online ``needs_norms`` policies the selection feedback is
+the update norm, whose batched reduction order differs from the legacy
+per-device ``_tree_l2`` at the ulp level — a near-exact score tie between
+two devices could in principle resolve differently.  Scores are continuous
+functions of the channel draws, so exact ties do not occur in practice and
+the equality grid pins schedule identity for ``update-aware``.)  The legacy
+loop remains the oracle the batched engine is pinned against
+(``tests/test_fl_engine.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization as qlib
+from repro.data.client_bank import ClientBank
+from repro.kernels.aggregate import weighted_aggregate_pallas
+from repro.models import lenet
+
+ENGINES = ("legacy", "batched")
+# run_federated_learning round-body implementations; FLConfig validates
+# ``fl_engine`` against this tuple.  "legacy" is the per-device host loop
+# (the oracle), "batched" this module's one-dispatch-per-round engine.
+
+
+# --------------------------------------------------------------------------
+# Shared local-SGD epoch (the single source of the per-client math)
+# --------------------------------------------------------------------------
+
+def sgd_epoch(params, x, y, lr, *, unroll: int = 1):
+    """One pass of minibatch SGD over a device's (padded) shard.
+
+    x: (n_batches, bs, D); y: (n_batches, bs) with -1 marking padding.
+    Both engines run exactly this function — the legacy loop jits it per
+    device (``fl._sgd_epoch``), the batched engine vmaps it over the client
+    axis — so an all-padding batch contributes an exactly-zero gradient and
+    the two paths apply the same update sequence.  ``unroll`` feeds
+    ``lax.scan`` (numerics-neutral); the batched engine unrolls a few steps
+    to cut the per-step loop overhead its one-dispatch round pays K-fold.
+    """
+
+    def step(p, batch):
+        bx, by, valid = batch
+
+        def masked_loss(p_):
+            logits = lenet.forward(p_, bx)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, by[:, None], axis=-1)[:, 0]
+            per = (logz - gold) * valid
+            return jnp.sum(per) / jnp.maximum(jnp.sum(valid), 1.0)
+
+        g = jax.grad(masked_loss)(p)
+        new = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+        return new, None
+
+    out, _ = jax.lax.scan(
+        step, params, (x, y, (y >= 0).astype(jnp.float32)), unroll=unroll
+    )
+    return out
+
+
+# --------------------------------------------------------------------------
+# The jitted round step
+# --------------------------------------------------------------------------
+
+def _pallas_aggregate_leaf(leaf, bits_k, agg_w, *, compress, paper_exact):
+    """Fused dequant + weighted sum of one client-stacked leaf.
+
+    Quantizes the raw deltas to per-client integer codes (float32-held: b
+    may reach 32, whose 2^32 - 1 levels overflow int32) and lets the Pallas
+    kernel apply scale_k * w_k / a_k during the reduction, so the
+    dequantized per-client tensors are never materialized.  A client with
+    b >= 32 gets the same full-precision passthrough as every other
+    quantization path (its kernel weight is zeroed and its raw delta joins
+    via a separate einsum — under the paper-exact fixed [-1, 1] range the
+    codes would otherwise clip it).  With ``compress=False`` the identity
+    codes (scale = a = 1) reduce to the plain weighted sum.
+    """
+    k = leaf.shape[0]
+    flat = leaf.reshape(k, -1).astype(jnp.float32)
+    if compress:
+        codes, scales, a = qlib.quantize_codes_batched(
+            flat, bits_k,
+            scales=jnp.ones((k,), jnp.float32) if paper_exact else None,
+        )
+        full = (bits_k >= 32).astype(jnp.float32)
+        out = weighted_aggregate_pallas(
+            codes, scales, agg_w * (1.0 - full), levels=a
+        )
+        out = out + jnp.einsum("k,kn->n", agg_w * full, flat)
+    else:
+        out = weighted_aggregate_pallas(
+            flat, jnp.ones((k,), jnp.float32), agg_w,
+            levels=jnp.ones((k,), jnp.float32),
+        )
+    return out.reshape(leaf.shape[1:])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "nb", "lr", "epochs", "payload", "compress", "paper_exact",
+        "use_pallas", "need_norms",
+    ),
+)
+def _round_step(
+    params, xb, yb, dev_idx, budgets, agg_w,
+    *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, need_norms,
+):
+    """gather -> vmapped local SGD -> norms -> quantize -> aggregate.
+
+    Returns (new_params, bits (K,) int32, norms (K,) f32; zeros unless
+    ``need_norms``).  ``nb`` slices the bank's global batch grid down to the
+    scheduled group's own max batch count (host-known per round), so the
+    scan never pays for the cell-wide largest shard; batches past a client's
+    own count are still all-padding and contribute exactly-zero gradients.
+    Retraces once per distinct (group size K, nb) pair.
+    """
+    x = xb[dev_idx, :nb]                 # (K, nb, BS, D)
+    y = yb[dev_idx, :nb]                 # (K, nb, BS)
+    k = dev_idx.shape[0]
+
+    def local_delta(xk, yk):
+        new = params
+        for _ in range(epochs):
+            new = sgd_epoch(new, xk, yk, lr, unroll=8)
+        return jax.tree_util.tree_map(lambda a, b: a - b, new, params)
+
+    deltas = jax.vmap(local_delta)(x, y)        # leaves (K, ...)
+
+    if need_norms:
+        # the policies' norm signal: raw pre-quantization deltas (one
+        # batched reduction instead of K per-device _tree_l2 host syncs)
+        sq = sum(
+            jnp.sum(jnp.square(leaf.reshape(k, -1).astype(jnp.float32)), axis=1)
+            for leaf in jax.tree_util.tree_leaves(deltas)
+        )
+        norms = jnp.sqrt(sq)
+    else:
+        norms = jnp.zeros((k,), jnp.float32)
+
+    if compress:
+        bits = qlib.adaptive_bits(payload, budgets)     # (K,) int32, traced
+    else:
+        bits = jnp.full((k,), 32, jnp.int32)
+
+    if use_pallas:
+        update = jax.tree_util.tree_map(
+            lambda leaf: _pallas_aggregate_leaf(
+                leaf, bits, agg_w, compress=compress, paper_exact=paper_exact
+            ),
+            deltas,
+        )
+    elif compress:
+        # XLA mirror of the Pallas kernel: quantize to per-client codes and
+        # fold the dequant scale s_k / a_k into the reduction coefficients,
+        # so the dequantized per-client trees are never materialized.  Same
+        # math as ``quantization.quantize_tree`` with (K,) bits followed by
+        # the weighted einsum (modulo multiplication order), including the
+        # per-client b >= 32 full-precision passthrough, which becomes a
+        # second einsum over the raw deltas with complementary weights.
+        a = qlib.dorefa_levels(bits)
+        full = (bits >= 32).astype(jnp.float32)
+        w_full = agg_w * full
+        w_q = agg_w * (1.0 - full) / a
+
+        def agg_leaf(leaf):
+            flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+            codes, scales, _ = qlib.quantize_codes_batched(
+                flat, bits,
+                scales=(
+                    jnp.ones((leaf.shape[0],), jnp.float32)
+                    if paper_exact else None
+                ),
+            )
+            out = jnp.einsum("k,kn->n", w_full, flat) + jnp.einsum(
+                "k,kn->n", w_q * scales, codes
+            )
+            return out.reshape(leaf.shape[1:])
+
+        update = jax.tree_util.tree_map(agg_leaf, deltas)
+    else:
+        update = jax.tree_util.tree_map(
+            lambda leaf: jnp.einsum("k,k...->...", agg_w, leaf), deltas
+        )
+    new_params = jax.tree_util.tree_map(lambda p, u: p + u, params, update)
+    return new_params, bits, norms
+
+
+# --------------------------------------------------------------------------
+# Engine front-end (what the fl driver calls)
+# --------------------------------------------------------------------------
+
+class BatchedRoundEngine:
+    """Round-body engine: builds the bank once, then one dispatch per round."""
+
+    def __init__(self, dataset, shards, cfg, payload_bits: int):
+        self.cfg = cfg
+        self.payload = int(payload_bits)
+        self.bank = ClientBank.build(
+            dataset.x_train, dataset.y_train, shards, cfg.batch_size
+        )
+
+    def run_round(self, params, devs, budgets, agg_w, *, need_norms: bool):
+        """Run one round's local training + upload + aggregation.
+
+        devs: scheduled device ids; budgets: per-device uplink bit budgets
+        (the driver computed both — identically for either engine);
+        agg_w: normalized FedAvg weights |D_k| / sum |D_k|.
+
+        Returns ``(params, bits, ratios, norms)`` with bits/ratios as
+        np arrays matching the legacy per-round log entries and norms a
+        list of floats (empty unless ``need_norms``).
+        """
+        k = len(devs)
+        if k == 0:    # empty T*K > M tail round: nothing to train or send
+            return params, np.zeros(0, np.int32), np.zeros(0), []
+        cfg = self.cfg
+        compress = cfg.compression == "adaptive"
+        # slice the scan to this group's own max batch count (see _round_step)
+        nb = self.bank.n_batches_for(devs)
+        params, bits, norms = _round_step(
+            params, self.bank.xb, self.bank.yb,
+            jnp.asarray(devs, jnp.int32),
+            jnp.asarray(np.asarray(budgets, np.float64)),
+            jnp.asarray(np.asarray(agg_w, np.float64), jnp.float32),
+            nb=nb, lr=float(cfg.learning_rate), epochs=int(cfg.local_epochs),
+            payload=self.payload, compress=compress,
+            paper_exact=bool(cfg.paper_exact_range),
+            use_pallas=bool(cfg.use_pallas), need_norms=bool(need_norms),
+        )
+        if compress:
+            # one vectorized call to the same helper the legacy loop runs
+            # per device — identical f32 IEEE ops, so the recorded ratios
+            # match the oracle's bit for bit
+            ratios = np.asarray(
+                qlib.compression_ratio(
+                    self.payload, np.asarray(budgets, np.float64)
+                ),
+                np.float64,
+            )
+        else:
+            ratios = np.ones(k)
+        norms_out = [float(v) for v in np.asarray(norms)] if need_norms else []
+        return params, np.asarray(bits), ratios, norms_out

@@ -68,13 +68,69 @@ def adaptive_bits(payload_bits, budget_bits) -> jax.Array:
     return jnp.clip(jnp.floor(32.0 / r), 1.0, 32.0).astype(jnp.int32)
 
 
+def quantize_codes_batched(flat: jax.Array, bits_k, *, scales=None):
+    """Per-client DoReFa codes for a client-stacked (K, N) matrix (Eq. 7).
+
+    The single owner of the batched code-generation math: row k is
+    quantized to ``bits_k[k]`` bits (traced or concrete) with its own
+    max-abs scale (or a caller-supplied (K,) ``scales`` vector, e.g. ones
+    for the paper-exact fixed [-1, 1] range).  Codes are float32-held:
+    b = 32 means a = 2^32 - 1 levels, which overflows int32.
+
+    Returns ``(codes, scales, levels)`` — exactly what the fused
+    dequant+aggregate consumers (the batched FL engine's einsum path and
+    ``kernels.aggregate.weighted_aggregate_pallas``) need.
+    """
+    a = dorefa_levels(bits_k)
+    xf = flat.astype(jnp.float32)
+    if scales is None:
+        scales = jnp.maximum(jnp.max(jnp.abs(xf), axis=1), 1e-12)
+    codes = jnp.round(a[:, None] * jnp.clip(xf / scales[:, None], -1.0, 1.0))
+    return codes, scales, a
+
+
+def quantize_batched(x: jax.Array, bits_k, *, scale=None) -> jax.Array:
+    """Per-client DoReFa over a client-stacked tensor (Eq. 7, batched).
+
+    x: (K, ...) with one client per leading row; bits_k: (K,) bit-widths,
+    traced or concrete.  Row k is quantized to ``bits_k[k]`` bits with its
+    own max-abs scale over the trailing axes (pass ``scale=1.0`` for the
+    paper-exact fixed [-1, 1] range) — elementwise identical to calling
+    :func:`quantize` on each row with that row's bits, including the
+    b >= 32 full-precision passthrough, but in one traced dispatch.
+    """
+    k = x.shape[0]
+    xf = x.astype(jnp.float32)
+    flat = xf.reshape(k, -1)
+    svec = (
+        None if scale is None
+        else jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (k,))
+    )
+    codes, scales, a = quantize_codes_batched(flat, bits_k, scales=svec)
+    q = (codes / a[:, None]) * scales[:, None]
+    bits_col = jnp.asarray(bits_k).reshape(k, 1)
+    out = jnp.where(bits_col >= 32, flat, q)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
 def quantize_tree(grads, bits, *, paper_exact: bool = False):
     """Quantize-dequantize every leaf of a gradient pytree to ``bits`` bits.
 
+    ``bits`` is either a scalar (every leaf quantized alike — the historical
+    API) or a (K,) vector, in which case every leaf must carry a leading
+    client axis of length K and row k is quantized to ``bits[k]`` bits
+    (:func:`quantize_batched` — the batched FL engine's traced per-client
+    adaptive bit-widths).
+
     paper_exact=True uses the fixed [-1,1] range of Eq. (7); otherwise each
-    leaf carries a per-tensor max-abs scale.
+    leaf carries a per-tensor (per client-row, in batched mode) max-abs
+    scale.
     """
     scale = 1.0 if paper_exact else None
+    if jnp.ndim(bits) == 1:
+        return jax.tree_util.tree_map(
+            lambda g: quantize_batched(g, bits, scale=scale), grads
+        )
     return jax.tree_util.tree_map(lambda g: quantize(g, bits, scale=scale), grads)
 
 

@@ -1,0 +1,87 @@
+"""Device-resident padded client data bank (the batched FL engine's input).
+
+The legacy FL loop re-pads and re-uploads every scheduled device's shard from
+host on every round (one ``local_update`` host round-trip per device).  The
+bank pays that cost exactly once: all M shards are padded to a common batch
+grid and uploaded as two device-resident tensors
+
+    xb: (M, n_batches, batch_size, D)  float32
+    yb: (M, n_batches, batch_size)     int32, -1 marks padding
+
+so a round is a K-row gather (``xb[dev_idx]``) inside the jitted round step
+instead of K host->device copies.  Padding rows carry label -1, the same
+validity convention the legacy SGD epoch masks on, so a shard shorter than
+the common grid trains identically to its legacy per-shard padding: the
+extra all-padding batches produce exactly-zero gradients and leave the
+parameters untouched.
+
+Memory: the bank is the dataset re-laid-out per device plus padding up to
+the *largest* shard's batch count, i.e. O(M * max_k ceil(|D_k|/bs) * bs * D)
+floats — at paper scale (M=300, MNIST-like) tens of MB.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientBank:
+    """All M client shards, padded and resident on device."""
+
+    xb: jax.Array        # (M, NB, BS, D) float32
+    yb: jax.Array        # (M, NB, BS) int32; -1 marks padding samples
+    sizes: np.ndarray    # (M,) realized shard sizes (host, for FedAvg weights)
+
+    @property
+    def num_devices(self) -> int:
+        return self.xb.shape[0]
+
+    @property
+    def batch_size(self) -> int:
+        return self.xb.shape[2]
+
+    @staticmethod
+    def _ceil_batches(n: int, batch_size: int) -> int:
+        """The grid rule: batches needed to cover n samples (min 1)."""
+        return max(1, int(-(-int(n) // int(batch_size))))
+
+    def n_batches_for(self, devs) -> int:
+        """Batches covering the given devices' shards — the batched engine
+        slices the global grid down to this per round (same rule as
+        ``build``, single owner), clamped to the bank's own grid."""
+        if not len(devs):
+            return 1
+        need = self._ceil_batches(self.sizes[list(devs)].max(), self.batch_size)
+        return min(need, self.xb.shape[1])
+
+    @classmethod
+    def build(
+        cls, x_train: np.ndarray, y_train: np.ndarray, shards: list,
+        batch_size: int,
+    ) -> "ClientBank":
+        """Pad all shards once to the common (n_batches, batch_size) grid.
+
+        Sample order inside each shard is preserved (shards arrive
+        pre-shuffled from the partitioner), so batch b of device k holds
+        exactly the samples the legacy ``local_update`` would put there.
+        """
+        m = len(shards)
+        d = x_train.shape[1]
+        bs = int(batch_size)
+        sizes = np.array([len(s) for s in shards], dtype=np.intp)
+        nb = cls._ceil_batches(sizes.max(), bs) if m else 1
+        xb = np.zeros((m, nb * bs, d), np.float32)
+        yb = np.full((m, nb * bs), -1, np.int32)
+        for k, idx in enumerate(shards):
+            n = len(idx)
+            xb[k, :n] = x_train[idx]
+            yb[k, :n] = y_train[idx]
+        return cls(
+            xb=jnp.asarray(xb.reshape(m, nb, bs, d)),
+            yb=jnp.asarray(yb.reshape(m, nb, bs)),
+            sizes=sizes,
+        )

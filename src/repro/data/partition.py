@@ -19,7 +19,8 @@ def dirichlet_partition(
 
     Each device's class distribution ~ Dirichlet(alpha); device sizes are
     log-normal-jittered around the uniform share. Every sample is assigned to
-    exactly one device.
+    exactly one device, and every *realized* shard meets ``min_per_device``
+    (clamped to ``len(labels) // num_devices`` when the floor is infeasible).
     """
     rng = np.random.default_rng(seed)
     num_classes = int(labels.max()) + 1
@@ -50,6 +51,23 @@ def dirichlet_partition(
     )
     for i, s in enumerate(np.array_split(leftovers, num_devices)):
         shards[i] = np.concatenate([shards[i], s])
+    # Enforce the floor on *realized* shards: the size clamp above applies to
+    # target sizes before class pools are exhausted, and the leftover
+    # round-robin only tops up the first devices, so late devices could come
+    # out below ``min_per_device``.  Rebalance from the largest shards until
+    # every device meets the (realizable) floor; donors never drop below it.
+    floor = min(min_per_device, len(labels) // max(num_devices, 1))
+    lengths = np.array([len(s) for s in shards])
+    for d in range(num_devices):
+        while lengths[d] < floor:
+            donor = int(np.argmax(lengths))
+            take = min(floor - lengths[d], lengths[donor] - floor)
+            if take <= 0:
+                break  # unreachable given floor <= len(labels) // num_devices
+            shards[d] = np.concatenate([shards[d], shards[donor][-take:]])
+            shards[donor] = shards[donor][:-take]
+            lengths[d] += take
+            lengths[donor] -= take
     for d in range(num_devices):
         rng.shuffle(shards[d])
     return shards

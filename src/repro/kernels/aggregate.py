@@ -5,9 +5,16 @@ sum of K dequantized client payloads. Fusing dequant+scale+sum keeps each
 code tile in VMEM exactly once instead of K separate dequant passes +
 K-way add in HBM.
 
-Tiling: codes are (K, R, 128); each grid step loads a (K, BLOCK_ROWS, 128)
-brick (K <= 8 in practice, so the brick stays well under VMEM limits) and
-reduces over K in registers.
+Tiling: codes are flattened to (K, R, 128) with R padded up to a multiple of
+BLOCK_ROWS (the pad is sliced back off, so arbitrary payload sizes work);
+each grid step loads a (K, BLOCK_ROWS, 128) brick (K <= 16 in practice, so
+the brick stays well under VMEM limits) and reduces over K in registers.
+
+Two dequant modes: a single static ``bits`` (every client quantized alike,
+the historical API) or a per-client ``levels`` vector a_k = 2^{b_k} - 1 for
+the batched FL engine's traced adaptive bit-widths.  Codes may be int32
+(packed payloads) or float32 (traced codes where b_k can reach 32 and
+2^32 - 1 no longer fits an int32).
 """
 from __future__ import annotations
 
@@ -20,30 +27,54 @@ from jax.experimental import pallas as pl
 from repro.kernels.dorefa import BLOCK_ROWS, LANE
 
 
-def _aggregate_kernel(c_ref, sw_ref, o_ref, *, a: float, k: int):
-    # c_ref: (K, BLOCK_ROWS, LANE) int32; sw_ref: (K, 2) [scale, weight]
+def _aggregate_kernel(c_ref, coeff_ref, o_ref, *, k: int):
+    # c_ref: (K, BLOCK_ROWS, LANE) codes; coeff_ref: (K,) scale*weight/a
     acc = jnp.zeros((c_ref.shape[1], c_ref.shape[2]), jnp.float32)
     for i in range(k):  # K is small and static: unrolled VPU adds
-        coeff = sw_ref[i, 0] * sw_ref[i, 1] / a
-        acc = acc + c_ref[i, :, :].astype(jnp.float32) * coeff
+        acc = acc + c_ref[i, :, :].astype(jnp.float32) * coeff_ref[i]
     o_ref[...] = acc
 
 
 def weighted_aggregate_pallas(
-    codes: jax.Array,     # (K, R, LANE) int32
+    codes: jax.Array,     # (K, ...) int32 or float32 codes, any trailing shape
     scales: jax.Array,    # (K,)
     weights: jax.Array,   # (K,)
-    bits: int,
+    bits: int | None = None,
     *,
+    levels: jax.Array | None = None,  # (K,) per-client a = 2^b - 1 (traced ok)
     interpret: bool = True,
 ) -> jax.Array:
-    k, rows, lane = codes.shape
-    assert lane == LANE and rows % BLOCK_ROWS == 0
-    a = float(2 ** int(bits) - 1)
-    sw = jnp.stack([scales.astype(jnp.float32), weights.astype(jnp.float32)], axis=1)
+    """sum_k w_k * scale_k * codes_k / a_k, shaped like ``codes[0]``.
+
+    Exactly one of ``bits`` (static, shared by all clients) or ``levels``
+    (per-client, may be traced) selects the dequant divisor.  Payloads of
+    any size are padded to the (BLOCK_ROWS, LANE) tile grid internally and
+    the pad is sliced off the result; K = 1 and empty payloads are legal.
+    """
+    if (bits is None) == (levels is None):
+        raise ValueError("pass exactly one of bits= or levels=")
+    k = codes.shape[0]
+    out_shape = codes.shape[1:]
+    n = 1
+    for d in out_shape:
+        n *= int(d)
+    if k == 0 or n == 0:
+        return jnp.zeros(out_shape, jnp.float32)
+    if levels is None:
+        levels = jnp.full((k,), float(2 ** int(bits) - 1), jnp.float32)
+    coeff = (
+        scales.astype(jnp.float32)
+        * weights.astype(jnp.float32)
+        / levels.astype(jnp.float32)
+    )
+    flat = codes.reshape(k, n)
+    pad = (-n) % (BLOCK_ROWS * LANE)
+    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    tiles = flat.reshape(k, -1, LANE)
+    rows = tiles.shape[1]
     grid = (rows // BLOCK_ROWS,)
-    return pl.pallas_call(
-        functools.partial(_aggregate_kernel, a=a, k=k),
+    out = pl.pallas_call(
+        functools.partial(_aggregate_kernel, k=k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((k, BLOCK_ROWS, LANE), lambda i: (0, i, 0)),
@@ -52,4 +83,5 @@ def weighted_aggregate_pallas(
         out_specs=pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
         interpret=interpret,
-    )(codes, sw)
+    )(tiles, coeff)
+    return out.reshape(-1)[:n].reshape(out_shape)

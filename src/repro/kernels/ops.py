@@ -78,7 +78,7 @@ def quantize_dequantize(x: jax.Array, bits: int, *, use_pallas: bool = False):
 
 @functools.partial(jax.jit, static_argnames=("bits", "use_pallas"))
 def weighted_aggregate(
-    codes: jax.Array,    # (K, R, LANE) int32 — stacked client payloads
+    codes: jax.Array,    # (K, ...) int32 — stacked client payloads, any shape
     scales: jax.Array,   # (K,)
     weights: jax.Array,  # (K,)
     bits: int,
@@ -87,10 +87,10 @@ def weighted_aggregate(
 ):
     if use_pallas:
         return weighted_aggregate_pallas(codes, scales, weights, bits)
-    k, rows, lane = codes.shape
+    k = codes.shape[0]
     return ref.weighted_aggregate_ref(
-        codes.reshape(k, rows * lane), scales, weights, bits
-    ).reshape(rows, lane)
+        codes.reshape(k, -1), scales, weights, bits
+    ).reshape(codes.shape[1:])
 
 
 @functools.partial(jax.jit, static_argnames=("noise_power", "use_pallas"))

@@ -1,0 +1,145 @@
+"""Engine-equality grid: the batched FL round engine vs the legacy oracle.
+
+The batched engine (``FLConfig.fl_engine = "batched"``) must reproduce the
+legacy per-device loop across uplink x compression x policy: identical
+device groups, bit-widths, budgets/rates and compression ratios (the driver
+computes those once, and the engine's traced adaptive bits must equal the
+legacy host ints), with accuracy trajectories and final parameters equal to
+f32 tolerance.  Includes the T*K > M empty-tail-round case and the Pallas
+aggregation path pinned against the XLA einsum.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import channel, fl
+from repro.data import dirichlet_partition, make_mnist_like
+
+M = 12
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_mnist_like(num_samples=800, seed=0)
+    cell = channel.CellConfig(num_devices=M)
+    shards = dirichlet_partition(ds.y_train, M, seed=0)
+    return ds, cell, shards
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    """4-device cell so a 3-round, K=2 horizon exhausts the device set."""
+    ds = make_mnist_like(num_samples=400, seed=0)
+    cell = channel.CellConfig(num_devices=4)
+    shards = dirichlet_partition(ds.y_train, 4, seed=0)
+    return ds, cell, shards
+
+
+def _run(world, engine, *, uplink="noma", compression="adaptive",
+         scheduler="lazy-gwmin", use_pallas=False, m=M, group_size=3,
+         rounds=3):
+    ds, cell, shards = world
+    cfg = FLConfig(num_devices=m, group_size=group_size, num_rounds=rounds,
+                   scheduler=scheduler, power_mode="max",
+                   compression=compression, fl_engine=engine,
+                   use_pallas=use_pallas, seed=0)
+    return fl.run_federated_learning(ds, shards, cell, cfg, uplink=uplink)
+
+
+def _assert_equal_runs(a, b, *, acc_atol=0.02, param_mean_atol=1e-6,
+                       param_max_atol=2e-2):
+    assert [l.devices for l in a.logs] == [l.devices for l in b.logs]
+    for la, lb in zip(a.logs, b.logs):
+        np.testing.assert_array_equal(la.bits, lb.bits)
+        np.testing.assert_array_equal(la.rates, lb.rates)
+        np.testing.assert_array_equal(la.compression_ratios,
+                                      lb.compression_ratios)
+    np.testing.assert_array_equal(a.times(), b.times())
+    np.testing.assert_allclose(a.accuracies(), b.accuracies(), atol=acc_atol)
+    # Per-element deltas between the engines are ulp-level, but a delta
+    # element landing exactly on a DoReFa round() boundary flips by one
+    # full quantization step (scale / (2^b - 1)) — a rare, isolated,
+    # legitimate divergence.  Compare distributions instead of elementwise:
+    # a systematic engine bug moves the mean, a boundary flip does not.
+    for x, y in zip(jax.tree_util.tree_leaves(a.final_params),
+                    jax.tree_util.tree_leaves(b.final_params)):
+        d = np.abs(np.asarray(x, np.float64) - np.asarray(y, np.float64))
+        assert d.mean() < param_mean_atol, f"mean param drift {d.mean()}"
+        assert d.max() < param_max_atol, f"max param drift {d.max()}"
+
+
+# lazy-gwmin: the paper's precomputed MWIS policy; update-aware: online,
+# needs_norms=True, so the engines' update-norm signals steer selection live
+@pytest.mark.parametrize("scheduler", ["lazy-gwmin", "update-aware"])
+@pytest.mark.parametrize("compression", ["adaptive", "none"])
+@pytest.mark.parametrize("uplink", ["noma", "tdma"])
+def test_engine_equality_grid(world, uplink, compression, scheduler):
+    legacy = _run(world, "legacy", uplink=uplink, compression=compression,
+                  scheduler=scheduler)
+    batched = _run(world, "batched", uplink=uplink, compression=compression,
+                   scheduler=scheduler)
+    _assert_equal_runs(legacy, batched)
+
+
+@pytest.mark.parametrize("uplink", ["noma", "tdma"])
+def test_engine_equality_empty_tail_rounds(tiny_world, uplink):
+    """T*K > M round-robin schedules end in empty groups; both engines must
+    log them identically (no training, wall clock still advances)."""
+    legacy = _run(tiny_world, "legacy", uplink=uplink,
+                  scheduler="round-robin", m=4, group_size=2, rounds=3)
+    batched = _run(tiny_world, "batched", uplink=uplink,
+                   scheduler="round-robin", m=4, group_size=2, rounds=3)
+    assert batched.logs[-1].devices == ()
+    assert batched.logs[-1].bits.size == 0
+    _assert_equal_runs(legacy, batched)
+
+
+@pytest.mark.parametrize("compression", ["adaptive", "none"])
+def test_pallas_aggregation_matches_xla(tiny_world, compression):
+    """use_pallas routes aggregation through the fused dequant+aggregate
+    kernel; results must match the default XLA einsum path to f32
+    tolerance (and bits/schedules exactly)."""
+    xla = _run(tiny_world, "batched", compression=compression, m=4,
+               group_size=2, rounds=3, scheduler="round-robin")
+    pallas = _run(tiny_world, "batched", compression=compression, m=4,
+                  group_size=2, rounds=3, scheduler="round-robin",
+                  use_pallas=True)
+    # both paths derive identical codes (shared quantize_codes_batched), so
+    # only reduction order differs — no rounding-flip allowance needed
+    _assert_equal_runs(xla, pallas, param_max_atol=1e-4)
+
+
+def test_pallas_aggregate_leaf_b32_passthrough():
+    """A b >= 32 client must pass through full precision on the Pallas
+    path too — under the paper-exact fixed [-1, 1] range its codes would
+    otherwise clip any |delta| > 1 (regression: the kernel path used to
+    quantize every client unconditionally)."""
+    import jax.numpy as jnp
+
+    from repro.core import fl_engine
+
+    leaf = jnp.asarray([[1.5, -2.0, 0.3], [0.5, 0.25, -0.125]], jnp.float32)
+    bits = jnp.asarray([32, 2], jnp.int32)
+    w = jnp.asarray([0.5, 0.5], jnp.float32)
+    out = fl_engine._pallas_aggregate_leaf(
+        leaf, bits, w, compress=True, paper_exact=True)
+    a = 3.0  # 2^2 - 1 levels for the quantized client
+    q1 = np.round(a * np.clip(np.asarray(leaf[1]), -1.0, 1.0)) / a
+    want = 0.5 * np.asarray(leaf[0]) + 0.5 * q1
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6, atol=1e-7)
+
+
+def test_batched_engine_deterministic(tiny_world):
+    a = _run(tiny_world, "batched", m=4, group_size=2, rounds=3,
+             scheduler="age-fair")
+    b = _run(tiny_world, "batched", m=4, group_size=2, rounds=3,
+             scheduler="age-fair")
+    assert [l.devices for l in a.logs] == [l.devices for l in b.logs]
+    np.testing.assert_array_equal(a.accuracies(), b.accuracies())
+
+
+def test_unknown_engine_rejected_at_config_time():
+    with pytest.raises(ValueError, match="unknown fl_engine"):
+        FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                 fl_engine="warp-drive")

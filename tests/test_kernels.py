@@ -60,6 +60,66 @@ def test_weighted_aggregate_matches_ref(k):
                                atol=1e-6)
 
 
+@pytest.mark.parametrize("k", [1, 3])
+@pytest.mark.parametrize("n", [1, 17, 1000, BLOCK_ROWS * LANE + 5])
+def test_weighted_aggregate_pallas_arbitrary_sizes(k, n):
+    """Regression: the kernel used to assert rows % BLOCK_ROWS == 0 and
+    lane == LANE; it must pad internally and slice, so any payload size
+    (and K=1) works against the numpy oracle."""
+    from repro.kernels.aggregate import weighted_aggregate_pallas
+
+    rng = np.random.default_rng(n * 31 + k)
+    codes = jnp.asarray(rng.integers(-15, 16, (k, n)), jnp.int32)
+    scales = jnp.asarray(rng.uniform(0.5, 2.0, k), jnp.float32)
+    w = jnp.asarray(rng.dirichlet(np.ones(k)), jnp.float32)
+    got = weighted_aggregate_pallas(codes, scales, w, 4)
+    want = np.sum(
+        np.asarray(w)[:, None] * np.asarray(scales)[:, None]
+        * np.asarray(codes, np.float64) / 15.0, axis=0,
+    )
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+def test_weighted_aggregate_pallas_empty_edges():
+    """Zero-length payloads and K=0 return zeros instead of a 0-block grid
+    error."""
+    from repro.kernels.aggregate import weighted_aggregate_pallas
+
+    out = weighted_aggregate_pallas(
+        jnp.zeros((2, 0), jnp.int32), jnp.ones(2), jnp.ones(2), 4)
+    assert out.shape == (0,)
+    out = weighted_aggregate_pallas(
+        jnp.zeros((0, 8), jnp.int32), jnp.zeros(0), jnp.zeros(0), 4)
+    assert out.shape == (8,) and np.all(np.asarray(out) == 0.0)
+
+
+def test_weighted_aggregate_pallas_per_client_levels():
+    """``levels`` dequantizes each client with its own a_k = 2^{b_k} - 1
+    (the batched FL engine's traced adaptive bit-widths); float32 codes are
+    accepted since 2^32 - 1 levels overflow int32."""
+    from repro.kernels.aggregate import weighted_aggregate_pallas
+
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((3, 500)).astype(np.float32)
+    bits = np.array([2, 5, 8])
+    a = (2.0 ** bits - 1).astype(np.float32)
+    scales = np.abs(x).max(axis=1).astype(np.float32)
+    codes = np.round(a[:, None] * np.clip(x / scales[:, None], -1, 1))
+    w = np.asarray([0.2, 0.3, 0.5], np.float32)
+    got = weighted_aggregate_pallas(
+        jnp.asarray(codes, jnp.float32), jnp.asarray(scales), jnp.asarray(w),
+        levels=jnp.asarray(a),
+    )
+    want = np.sum(w[:, None] * scales[:, None] * codes / a[:, None], axis=0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError, match="exactly one of"):
+        weighted_aggregate_pallas(
+            jnp.asarray(codes, jnp.float32), jnp.asarray(scales),
+            jnp.asarray(w), 4, levels=jnp.asarray(a),
+        )
+
+
 def test_aggregate_linearity():
     """Aggregation is linear: agg(w) ~ sum w_k dq_k (oracle identity)."""
     n = BLOCK_ROWS * LANE

@@ -75,6 +75,42 @@ def test_quantize_tree_structure_preserved():
     assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(tree)
 
 
+@pytest.mark.parametrize("paper_exact", [False, True])
+def test_quantize_tree_batched_bits_matches_per_client(paper_exact):
+    """(K,) bits mode == calling quantize on each client row with its own
+    bits, bit for bit (incl. the b >= 32 passthrough and per-row scales)."""
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    tree = {
+        "w": jax.random.normal(k1, (4, 7, 5)) * 0.7,
+        "b": jax.random.normal(k2, (4, 3)) * 2.0,
+    }
+    bits = jnp.asarray([1, 4, 8, 32], jnp.int32)
+    out = q.quantize_tree(tree, bits, paper_exact=paper_exact)
+    for i in range(4):
+        row = {"w": tree["w"][i], "b": tree["b"][i]}
+        want = q.quantize_tree(row, int(bits[i]), paper_exact=paper_exact)
+        np.testing.assert_array_equal(np.asarray(out["w"][i]),
+                                      np.asarray(want["w"]))
+        np.testing.assert_array_equal(np.asarray(out["b"][i]),
+                                      np.asarray(want["b"]))
+
+
+def test_quantize_batched_traced_bits_under_jit():
+    """The (K,) bits vector may be traced (the batched FL engine passes the
+    adaptive bits computed inside the same jit)."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 64))
+
+    @jax.jit
+    def f(x, budgets):
+        bits = q.adaptive_bits(64 * 32, budgets)
+        return q.quantize_tree({"g": x}, bits)["g"], bits
+
+    got, bits = f(x, jnp.asarray([100.0, 700.0, 1e9]))
+    want = jnp.stack([q.quantize(x[i], int(bits[i])) for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_error_decreases_with_bits():
     x = jax.random.normal(jax.random.PRNGKey(2), (1024,))
     errs = [float(q.quantization_error(x, b)) for b in (1, 2, 4, 8, 16)]

@@ -13,7 +13,9 @@ except ImportError:  # offline container: seeded numpy-backed shim
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.core import channel
-from repro.data import dirichlet_partition, make_mnist_like, synthetic_token_batches
+from repro.data import (
+    ClientBank, dirichlet_partition, make_mnist_like, synthetic_token_batches,
+)
 from repro.optim import adam, adamw, momentum, sgd
 from repro.optim.schedules import cosine_decay, linear_warmup_cosine
 
@@ -89,6 +91,52 @@ def test_partition_non_iid(rng):
     assert sizes.std() > 0  # sizes differ too
 
 
+def test_partition_enforces_realized_floor():
+    """Regression (failing-before): the ``min_per_device`` clamp applied to
+    *target* sizes before class pools were exhausted, and the leftover
+    round-robin only topped up the first devices — late devices could
+    realize shards far below the floor (this instance used to produce a
+    3-sample shard).  The floor must hold on realized shards."""
+    labels = np.random.default_rng(0).integers(0, 10, 300).astype(np.int64)
+    shards = dirichlet_partition(labels, 24, alpha=0.3, size_sigma=1.0, seed=0)
+    sizes = np.array([len(s) for s in shards])
+    assert sizes.min() >= 8, f"realized shard below floor: {sizes.min()}"
+    # still an exact cover after rebalancing
+    all_idx = np.concatenate(shards)
+    assert len(all_idx) == 300 and len(np.unique(all_idx)) == 300
+
+
+def test_partition_floor_clamps_when_infeasible():
+    """num_devices * min_per_device > n: the floor degrades to
+    n // num_devices instead of dropping or duplicating samples."""
+    labels = (np.arange(20) % 4).astype(np.int64)
+    shards = dirichlet_partition(labels, 10, min_per_device=8, seed=1)
+    sizes = np.array([len(s) for s in shards])
+    assert sizes.min() >= 2 and sizes.sum() == 20
+    assert len(np.unique(np.concatenate(shards))) == 20
+
+
+def test_client_bank_matches_legacy_padding():
+    """The bank's batch grid holds exactly the samples the legacy
+    ``local_update`` padding would put there: shard order preserved,
+    label -1 past each shard's end, global n_batches = max shard's."""
+    ds = make_mnist_like(num_samples=600, seed=0)
+    shards = dirichlet_partition(ds.y_train, 6, seed=0)
+    bank = ClientBank.build(ds.x_train, ds.y_train, shards, batch_size=10)
+    sizes = np.array([len(s) for s in shards])
+    nb = -(-sizes.max() // 10)
+    assert bank.xb.shape == (6, nb, 10, 784)
+    assert bank.yb.shape == (6, nb, 10)
+    np.testing.assert_array_equal(bank.sizes, sizes)
+    for k, idx in enumerate(shards):
+        flat_x = np.asarray(bank.xb[k]).reshape(-1, 784)
+        flat_y = np.asarray(bank.yb[k]).reshape(-1)
+        np.testing.assert_array_equal(flat_x[: len(idx)], ds.x_train[idx])
+        np.testing.assert_array_equal(flat_y[: len(idx)], ds.y_train[idx])
+        assert np.all(flat_y[len(idx):] == -1)
+        assert np.all(flat_x[len(idx):] == 0.0)
+
+
 def test_mnist_like_deterministic_and_learnable():
     a = make_mnist_like(num_samples=1000, seed=3)
     b = make_mnist_like(num_samples=1000, seed=3)
@@ -151,6 +199,25 @@ def test_positions_within_cell(seed):
     cfg = channel.CellConfig(num_devices=50)
     d = np.asarray(channel.sample_positions(jax.random.PRNGKey(seed), cfg))
     assert np.all(d >= cfg.min_distance_m) and np.all(d <= cfg.cell_radius_m)
+
+
+def test_downlink_time_survives_f32_snr_underflow():
+    """Regression (failing-before): a far device under a high path-loss
+    exponent has a gain whose *square* underflows float32, which zeroed the
+    downlink SNR, the rate, and returned T_d = inf — silently poisoning the
+    Fig. 5 time axis.  The computation now runs in float64 (log1p), like
+    the uplink rate engine."""
+    cfg = channel.CellConfig()
+    gains = jnp.asarray([1e-3, 1e-25], jnp.float32)  # (1e-25)^2 == 0 in f32
+    t = channel.downlink_time_seconds(1e6, gains, cfg)
+    assert np.isfinite(t) and t > 0
+
+
+def test_downlink_time_zero_gain_raises():
+    """A genuinely unreachable device (zero gain) is an error, not inf."""
+    cfg = channel.CellConfig()
+    with pytest.raises(ValueError, match="zero downlink SNR"):
+        channel.downlink_time_seconds(1e6, jnp.asarray([1e-3, 0.0]), cfg)
 
 
 def test_noise_power_matches_dbm():
