@@ -4,7 +4,8 @@ Fig. 5 / Fig. 6 settings.
 
     PYTHONPATH=src python examples/fl_noma_mnist.py [--fast] \
         [--scheduler NAME] [--power mapel|max] [--uplink noma|tdma] \
-        [--engine batched|legacy] [--pallas-agg]
+        [--engine batched|legacy] [--pallas-agg] \
+        [--horizon per-round|scan] [--seeds N]
 
 ``--scheduler`` accepts any registered policy name (see
 ``repro.core.scheduling``): the paper's precomputed schedulers
@@ -21,6 +22,17 @@ BENCH_fl.json) and equal to the legacy loop to f32 tolerance;
 ``FLConfig.use_pallas``: the batched engine then aggregates through the
 fused dequant+aggregate Pallas kernel instead of the XLA einsum
 (interpret mode on CPU, Mosaic on TPU).
+
+``--horizon scan`` (``FLConfig.horizon``) runs the whole precomputed
+horizon as ONE ``lax.scan`` device program instead of dispatching round
+by round — identical schedules/bits/rates/times, bit-identical
+accuracies (tests/test_fl_scan.py); precomputed policies only, online
+policies are rejected at config time.  ``--seeds N`` additionally sweeps
+N independent seeds (model init + channel draws + schedule each) through
+``fl.run_horizon_vmapped`` — one vmapped program for the whole sweep —
+and reports the mean/std final accuracy; it implies ``--horizon scan``.
+Multi-cell grids with the cell axis sharded over a device mesh live in
+``fl.run_cell_sweep`` (BENCH_cells.json tracks the sweep speedup).
 
 Takes ~10-20 min at full scale on this CPU (legacy engine; the batched
 engine cuts the round-loop time severalfold); --fast runs M=60, T=10.
@@ -45,8 +57,17 @@ def main():
     ap.add_argument("--engine", default="batched", choices=["legacy", "batched"])
     ap.add_argument("--pallas-agg", action="store_true",
                     help="batched engine: aggregate via the Pallas kernel")
+    ap.add_argument("--horizon", default="per-round",
+                    choices=["per-round", "scan"],
+                    help="scan: whole precomputed horizon as one lax.scan "
+                         "program (no online policies)")
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="sweep N seeds through one vmapped scan program "
+                         "(implies --horizon scan)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.seeds is not None:
+        args.horizon = "scan"
 
     m = 60 if args.fast else 300              # paper: M = 300
     t = args.rounds or (10 if args.fast else 35)  # paper: T = 35
@@ -59,12 +80,29 @@ def main():
                    learning_rate=0.01, batch_size=10,   # Table I
                    scheduler=args.scheduler, power_mode=args.power,
                    compression="adaptive", fl_engine=args.engine,
-                   use_pallas=args.pallas_agg, seed=args.seed)
+                   use_pallas=args.pallas_agg, horizon=args.horizon,
+                   seed=args.seed)
 
     online = scheduling.get_policy(args.scheduler).online
     print(f"M={m} K=3 T={t} scheduler={args.scheduler} power={args.power} "
           f"uplink={args.uplink} engine={args.engine} "
+          f"horizon={args.horizon} "
           f"mode={'online (live)' if online else 'precomputed'}")
+
+    if args.seeds is not None:
+        sweep = fl.run_horizon_vmapped(
+            ds, shards, cell, cfg,
+            seeds=range(args.seed, args.seed + args.seeds),
+            uplink=args.uplink)
+        finals = np.array([r.accuracies()[-1] for r in sweep])
+        for i, r in enumerate(sweep):
+            print(f"seed {args.seed + i}: final acc "
+                  f"{r.accuracies()[-1]:.3f} "
+                  f"sim time {r.times()[-1]:6.1f}s")
+        print(f"\n{args.seeds} seeds: final acc {finals.mean():.3f} "
+              f"+/- {finals.std():.3f}")
+        return
+
     res = fl.run_federated_learning(
         ds, shards, cell, cfg, uplink=args.uplink,
         progress=lambda log: print(

@@ -177,6 +177,16 @@ class FLConfig:
     use_pallas: bool = False         # batched engine only: aggregate through
                                      # the fused dequant+aggregate Pallas
                                      # kernel instead of the XLA einsum
+    horizon: str = "per-round"       # per-round (host round loop; the only
+                                     # mode online policies can run under) |
+                                     # scan (precomputed-schedule horizon as
+                                     # ONE lax.scan device program; vmappable
+                                     # over seeds, shardable over a cell mesh)
+    eval_sample: float = 1.0         # fraction of the test set evaluated per
+                                     # round via the EvalBank gather (batched
+                                     # engine + scan horizon); 1.0 = full
+                                     # test set, bit-identical to the legacy
+                                     # lenet.accuracy eval
     seed: int = 0
 
     def __post_init__(self):
@@ -219,4 +229,33 @@ class FLConfig:
             raise ValueError(
                 f"unknown fl_engine {self.fl_engine!r}; "
                 f"known: {fl_engine.ENGINES}"
+            )
+        if self.horizon not in fl_engine.HORIZON_MODES:
+            raise ValueError(
+                f"unknown horizon {self.horizon!r}; "
+                f"known: {fl_engine.HORIZON_MODES}"
+            )
+        if self.horizon == "scan" and scheduling.policy_is_online(self.scheduler):
+            # No silent fallback to the per-round driver: a scan horizon
+            # cannot feed update norms / participation back into the policy
+            # mid-program, so the run would silently be a different policy.
+            raise ValueError(
+                f"horizon='scan' cannot drive online policy "
+                f"{self.scheduler!r}: online policies select from live FL "
+                f"state fed back by the host loop each round; use "
+                f"horizon='per-round'"
+            )
+        if not 0.0 < self.eval_sample <= 1.0:
+            raise ValueError(
+                f"eval_sample must be in (0, 1], got {self.eval_sample}"
+            )
+        if (
+            self.eval_sample < 1.0
+            and self.fl_engine == "legacy"
+            and self.horizon == "per-round"
+        ):
+            raise ValueError(
+                "eval_sample < 1 requires fl_engine='batched' or "
+                "horizon='scan' (the legacy loop always evaluates the full "
+                "test set)"
             )

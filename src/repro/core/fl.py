@@ -64,6 +64,7 @@ from repro.core import channel as chan
 from repro.core import compression, fl_engine, noma, scheduling
 from repro.core import power as power_lib
 from repro.core import quantization as qlib
+from repro.data.client_bank import ClientBank, EvalBank, eval_sample_plan
 from repro.models import lenet
 from repro.utils.tree import tree_count
 
@@ -203,6 +204,47 @@ def make_schedule(
     )
 
 
+def _round_physics(devs, powers_t, rates, t, gains, cell, uplink, dl_time):
+    """Uplink rates, bit budgets, and wall time of one scheduled round.
+
+    The single owner of the §IV timing/budget rules, shared by the
+    per-round host loop and the scanned-horizon packer — the scan-vs-
+    per-round equality of rates, budgets and times holds by construction.
+    Returns ``(rates, budgets, round_time)``; ``rates``/``budgets`` are
+    (len(devs),) float64.
+    """
+    if uplink == "tdma":
+        # each device alone in its sub-slot, interference-free
+        p = powers_t
+        g = gains[t, list(devs)]
+        rates = np.asarray(
+            noma.tdma_rates(jnp.asarray(p), jnp.asarray(g), cell.noise_power_w)
+        )
+        slot = cell.slot_seconds  # each scheduled device gets a full slot
+        budgets = rates * cell.bandwidth_hz * slot
+        # airtime = one sub-slot per *scheduled* device: empty/partial
+        # T*K > M tail rounds must not be charged the full K sub-slots
+        # (that skewed the Fig. 5 time axis against TDMA tails)
+        round_time = len(devs) * cell.slot_seconds + dl_time
+    else:
+        rates = np.asarray(rates)
+        budgets = rates * cell.bandwidth_hz * cell.slot_seconds
+        # the shared NOMA uplink slot is only spent when someone
+        # transmits — empty T*K > M tail rounds cost downlink only
+        # (mirrors the TDMA per-device sub-slot accounting above)
+        uplink_time = cell.slot_seconds if devs else 0.0
+        round_time = uplink_time + dl_time
+    return rates, budgets, round_time
+
+
+def _agg_weights(sizes, devs) -> np.ndarray:
+    """FedAvg weights w_k = |D_k| / sum_selected |D_k| — one owner so both
+    drivers (and both engines) aggregate with identical host-float64
+    values."""
+    raw_w = [sizes[d] for d in devs]
+    return np.asarray(raw_w) / max(sum(raw_w), 1.0)
+
+
 def _tree_l2(tree) -> float:
     """||tree||_2 over all leaves (the update-aware policies' norm signal).
 
@@ -231,7 +273,17 @@ def run_federated_learning(
     """Simulate the full FL process; returns per-round logs.
 
     dataset: repro.data.mnist_like.Dataset; shards: per-device index lists.
+
+    ``cfg.horizon = "scan"`` delegates to :func:`run_horizon_scanned`
+    (the whole precomputed-schedule horizon as one device program —
+    config validation already rejected online policies); this host loop
+    is the per-round driver online policies and oracle comparisons live in.
     """
+    if cfg.horizon == "scan":
+        return run_horizon_scanned(
+            dataset, shards, cell, cfg, uplink=uplink, schedule=schedule,
+            eval_every=eval_every, progress=progress,
+        )
     key = jax.random.PRNGKey(cfg.seed)
     params = lenet.schema()
     from repro.models.params import init_params
@@ -287,9 +339,10 @@ def run_federated_learning(
     dl_gains = chan.large_scale_gain(dist, cell)
     dl_time = float(chan.downlink_time_seconds(payload, dl_gains, cell))
 
-    x_test = jnp.asarray(dataset.x_test)
-    y_test = jnp.asarray(dataset.y_test)
-    acc_fn = jax.jit(lenet.accuracy)
+    if engine is None:   # the batched engine evaluates through its EvalBank
+        x_test = jnp.asarray(dataset.x_test)
+        y_test = jnp.asarray(dataset.y_test)
+        acc_fn = jax.jit(lenet.accuracy)
 
     logs = []
     t_wall = 0.0
@@ -308,31 +361,10 @@ def run_federated_learning(
             devs = schedule.rounds[t]
             powers_t = schedule.powers[t]
             rates = schedule.rates[t]  # spectral efficiency (bit/s/Hz)
-        if uplink == "tdma":
-            # each device alone in its sub-slot, interference-free
-            p = powers_t
-            g = gains[t, list(devs)]
-            rates = np.asarray(
-                noma.tdma_rates(jnp.asarray(p), jnp.asarray(g), cell.noise_power_w)
-            )
-            slot = cell.slot_seconds  # each scheduled device gets a full slot
-            budgets = rates * cell.bandwidth_hz * slot
-            # airtime = one sub-slot per *scheduled* device: empty/partial
-            # T*K > M tail rounds must not be charged the full K sub-slots
-            # (that skewed the Fig. 5 time axis against TDMA tails)
-            round_time = len(devs) * cell.slot_seconds + dl_time
-        else:
-            budgets = rates * cell.bandwidth_hz * cell.slot_seconds
-            # the shared NOMA uplink slot is only spent when someone
-            # transmits — empty T*K > M tail rounds cost downlink only
-            # (mirrors the TDMA per-device sub-slot accounting above)
-            uplink_time = cell.slot_seconds if devs else 0.0
-            round_time = uplink_time + dl_time
-
-        # FedAvg weights w_k = |D_k| / sum_selected |D_k| — computed here so
-        # both engines aggregate with identical host-float64 values
-        raw_w = [sizes[d] for d in devs]
-        agg_w = np.asarray(raw_w) / max(sum(raw_w), 1.0)
+        rates, budgets, round_time = _round_physics(
+            devs, powers_t, rates, t, gains, cell, uplink, dl_time
+        )
+        agg_w = _agg_weights(sizes, devs)
         need_norms = policy is not None and getattr(policy, "needs_norms", True)
         if engine is not None:
             params, bits_used, ratios, norms = engine.run_round(
@@ -357,7 +389,14 @@ def run_federated_learning(
         # the final round is always evaluated: accuracies()[-1] must measure
         # the final model even when eval_every skips over num_rounds - 1
         do_eval = t % eval_every == 0 or t == cfg.num_rounds - 1
-        acc = float(acc_fn(params, x_test, y_test)) if do_eval else logs[-1].test_accuracy
+        if not do_eval:
+            acc = logs[-1].test_accuracy
+        elif engine is not None:
+            # batched engine: eval through the EvalBank gather (sampled per
+            # cfg.eval_sample; at 1.0 bit-identical to the legacy full eval)
+            acc = engine.evaluate(params, t)
+        else:
+            acc = float(acc_fn(params, x_test, y_test))
         log = RoundLog(t, tuple(devs), np.asarray(rates), np.asarray(bits_used),
                        np.asarray(ratios), acc, t_wall)
         logs.append(log)
@@ -366,3 +405,427 @@ def run_federated_learning(
 
     scheme = f"{uplink}/{cfg.scheduler}/{cfg.power_mode}/{cfg.compression}"
     return FLResult(logs, params, scheme)
+
+
+# --------------------------------------------------------------------------
+# Scanned horizons: the whole precomputed simulation as ONE device program
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _HorizonPlan:
+    """Host-precomputed plan for one simulation instance (one seed).
+
+    Everything the per-round driver computes on the host — model init,
+    channel draws, schedule, rates, budgets, FedAvg weights, timing —
+    packed into fixed-shape (T, K) tensors the scan consumes (zero-padded
+    past each round's true group size; zero agg weights multiply the
+    padding out of the aggregate exactly).
+    """
+
+    params0: dict                # freshly initialized model
+    payload: int                 # I: full-precision payload bits
+    schedule: scheduling.Schedule
+    dev_tk: np.ndarray           # (T, K) int32 device ids, 0-padded
+    ksizes: np.ndarray           # (T,) true per-round group sizes
+    budgets_tk: np.ndarray       # (T, K) float64 uplink bit budgets, 0-padded
+    aggw_tk: np.ndarray          # (T, K) float64 FedAvg weights, 0-padded
+    rates: list                  # per-round (k,) float64 uplink rates
+    times: np.ndarray            # (T,) cumulative simulated wall clock
+    eval_idx: "np.ndarray | None"  # (T, n) eval sample plan; None = full set
+
+
+def _horizon_setup(dataset, shards, cell, cfg: FLConfig, uplink, schedule):
+    """Host precompute for one scanned instance.
+
+    Mirrors :func:`run_federated_learning`'s setup exactly — same PRNG
+    folds, same schedule construction, same :func:`_round_physics` /
+    :func:`_agg_weights` calls — so the two drivers simulate the identical
+    system and the equality grid can demand identical schedules, budgets,
+    rates and times.
+    """
+    from repro.models.params import init_params
+
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_params(lenet.schema(), key)
+    payload = tree_count(params) * 32
+
+    sizes = np.array([len(s) for s in shards], dtype=np.float64)
+    weights = sizes / sizes.sum()
+
+    dist = chan.sample_positions(jax.random.fold_in(key, 1), cell)
+    gains = np.asarray(
+        chan.sample_round_channels(jax.random.fold_in(key, 2), dist, cell,
+                                   cfg.num_rounds)
+    )
+
+    if schedule is None:
+        policy = scheduling.get_policy(cfg.scheduler)
+        if getattr(policy, "online", False):
+            # FLConfig already rejects horizon="scan" + online policies;
+            # guard direct run_horizon_scanned calls with the same message.
+            raise ValueError(
+                f"horizon='scan' cannot drive online policy "
+                f"{cfg.scheduler!r}: online policies select from live FL "
+                f"state fed back by the host loop each round; use "
+                f"horizon='per-round'"
+            )
+        schedule = make_schedule(gains, weights, cell, cfg, policy=policy)
+    else:
+        schedule.validate(cell.num_devices, cfg.group_size)
+
+    dl_gains = chan.large_scale_gain(dist, cell)
+    dl_time = float(chan.downlink_time_seconds(payload, dl_gains, cell))
+
+    T, K = cfg.num_rounds, cfg.group_size
+    dev_tk = np.zeros((T, K), np.int32)
+    ksizes = np.zeros(T, np.intp)
+    budgets_tk = np.zeros((T, K), np.float64)
+    aggw_tk = np.zeros((T, K), np.float64)
+    rates_list = []
+    times = np.zeros(T, np.float64)
+    t_wall = 0.0
+    for t in range(T):
+        devs = schedule.rounds[t]
+        rates, budgets, round_time = _round_physics(
+            devs, schedule.powers[t], schedule.rates[t], t, gains, cell,
+            uplink, dl_time,
+        )
+        k = len(devs)
+        ksizes[t] = k
+        dev_tk[t, :k] = devs
+        budgets_tk[t, :k] = budgets
+        aggw_tk[t, :k] = _agg_weights(sizes, devs)
+        rates_list.append(rates)
+        t_wall += round_time
+        times[t] = t_wall
+
+    eval_idx = eval_sample_plan(
+        len(dataset.y_test), cfg.eval_sample, T, cfg.seed
+    )
+    return _HorizonPlan(params, payload, schedule, dev_tk, ksizes,
+                        budgets_tk, aggw_tk, rates_list, times, eval_idx)
+
+
+def _horizon_statics(cfg: FLConfig, payload: int, eval_full: bool) -> dict:
+    """The static kwargs of the fl_engine horizon programs, from the config."""
+    return dict(
+        lr=float(cfg.learning_rate), epochs=int(cfg.local_epochs),
+        payload=int(payload), compress=cfg.compression == "adaptive",
+        paper_exact=bool(cfg.paper_exact_range),
+        use_pallas=bool(cfg.use_pallas), eval_full=bool(eval_full),
+    )
+
+
+def _eval_mask(num_rounds: int, eval_every: int) -> np.ndarray:
+    """(T,) bool: which rounds evaluate — same cadence rule as the host
+    loop, final round always included."""
+    return np.array(
+        [t % eval_every == 0 or t == num_rounds - 1
+         for t in range(num_rounds)]
+    )
+
+
+def _stack_plans(plans, bank, num_rounds):
+    """Stack per-instance plans along a leading axis for vmap/shard_map.
+
+    Returns ``(params_s, dev, bud, agg, eidx, eval_full, nb)`` where ``nb``
+    is the sweep-wide max scheduled batch count (one static shape for every
+    instance — the padding batches contribute exactly-zero gradients).
+    """
+    params_s = jax.tree_util.tree_map(
+        lambda *ls: jnp.stack(ls), *[p.params0 for p in plans]
+    )
+    dev = np.stack([p.dev_tk for p in plans])
+    bud = np.stack([p.budgets_tk for p in plans])
+    agg = np.stack([p.aggw_tk for p in plans])
+    eval_full = plans[0].eval_idx is None
+    if eval_full:
+        # dummy single-row plan: the traced gather needs a concrete shape
+        # even though eval_full short-circuits it out of the program
+        eidx = np.zeros((len(plans), num_rounds, 1), np.int32)
+    else:
+        eidx = np.stack([p.eval_idx for p in plans])
+    nb = max(
+        max(bank.n_batches_for(g) for g in p.schedule.rounds) for p in plans
+    )
+    return params_s, dev, bud, agg, eidx, eval_full, nb
+
+
+def _assemble_horizon_result(
+    plan: _HorizonPlan, cfg: FLConfig, uplink, eval_mask, bits_tk, accs_t,
+    final_params, progress=None,
+) -> FLResult:
+    """Per-round ``RoundLog`` list from the scan outputs + the host plan.
+
+    Slices each round's (K,) scan row down to its true group size, rebuilds
+    the compression ratios with the same helper the per-round engines call,
+    and forward-fills skipped-eval rounds' accuracy — the same logging
+    contract :func:`run_federated_learning` produces, entry for entry.
+    """
+    logs = []
+    acc_prev = None
+    for t in range(cfg.num_rounds):
+        k = int(plan.ksizes[t])
+        bits_r = np.asarray(bits_tk[t, :k])
+        if k == 0:
+            ratios = np.zeros(0)
+        elif cfg.compression == "adaptive":
+            ratios = np.asarray(
+                qlib.compression_ratio(
+                    plan.payload, np.asarray(plan.budgets_tk[t, :k], np.float64)
+                ),
+                np.float64,
+            )
+        else:
+            ratios = np.ones(k)
+        acc = float(accs_t[t]) if eval_mask[t] else acc_prev
+        acc_prev = acc
+        log = RoundLog(
+            t, tuple(plan.schedule.rounds[t]), np.asarray(plan.rates[t]),
+            bits_r, ratios, acc, float(plan.times[t]),
+        )
+        logs.append(log)
+        if progress:
+            progress(log)
+    scheme = f"{uplink}/{cfg.scheduler}/{cfg.power_mode}/{cfg.compression}"
+    return FLResult(logs, final_params, scheme)
+
+
+def run_horizon_scanned(
+    dataset,
+    shards: list,
+    cell: chan.CellConfig,
+    cfg: FLConfig,
+    *,
+    uplink: str = "noma",
+    schedule: Optional[scheduling.Schedule] = None,
+    eval_every: int = 1,
+    progress: Optional[Callable[[RoundLog], None]] = None,
+) -> FLResult:
+    """One precomputed-schedule horizon as ONE device program.
+
+    The tentpole driver behind ``cfg.horizon = "scan"``: all host work
+    (schedule, rates, budgets, weights, timing) happens up front in
+    :func:`_horizon_setup`; training + quantization + aggregation + eval
+    for all T rounds then run as a single ``lax.scan`` dispatch
+    (:func:`fl_engine.run_horizon`).  Same logs as the per-round driver —
+    identical schedules/bits/rates/times, f32-tolerance accuracies — which
+    ``tests/test_fl_scan.py`` pins across the uplink x compression x
+    policy grid.
+    """
+    plan = _horizon_setup(dataset, shards, cell, cfg, uplink, schedule)
+    bank = ClientBank.build(
+        dataset.x_train, dataset.y_train, shards, cfg.batch_size
+    )
+    ebank = EvalBank.build(dataset.x_test, dataset.y_test)
+
+    T = cfg.num_rounds
+    eval_mask = _eval_mask(T, eval_every)
+    eval_full = plan.eval_idx is None
+    eidx = (np.zeros((T, 1), np.int32) if eval_full else plan.eval_idx)
+    nb = max(bank.n_batches_for(g) for g in plan.schedule.rounds)
+
+    final, bits_tk, accs_t = fl_engine.run_horizon(
+        plan.params0,
+        jnp.asarray(plan.dev_tk),
+        jnp.asarray(plan.budgets_tk),
+        jnp.asarray(plan.aggw_tk, jnp.float32),
+        jnp.asarray(eval_mask),
+        jnp.asarray(eidx),
+        bank.xb, bank.yb, ebank.xe, ebank.ye,
+        nb=int(nb), **_horizon_statics(cfg, plan.payload, eval_full),
+    )
+    return _assemble_horizon_result(
+        plan, cfg, uplink, eval_mask, np.asarray(bits_tk), np.asarray(accs_t),
+        final, progress,
+    )
+
+
+def run_horizon_vmapped(
+    dataset,
+    shards: list,
+    cell: chan.CellConfig,
+    cfg: FLConfig,
+    *,
+    seeds,
+    uplink: str = "noma",
+    eval_every: int = 1,
+) -> list:
+    """A whole seed sweep — S independent scanned horizons, one dispatch.
+
+    Each seed gets its own model init, channel draws, schedule and eval
+    plan (``dataclasses.replace(cfg, seed=s)``); the client bank and test
+    set are shared.  Returns one :class:`FLResult` per seed, in order —
+    row s is the same program :func:`run_horizon_scanned` runs for that
+    seed alone (the row-0 identity test pins this).
+    """
+    seeds = [int(s) for s in seeds]
+    if not seeds:
+        raise ValueError("seeds must be a non-empty sequence")
+    plans = [
+        _horizon_setup(
+            dataset, shards, cell, dataclasses.replace(cfg, seed=s), uplink,
+            None,
+        )
+        for s in seeds
+    ]
+    bank = ClientBank.build(
+        dataset.x_train, dataset.y_train, shards, cfg.batch_size
+    )
+    ebank = EvalBank.build(dataset.x_test, dataset.y_test)
+
+    T = cfg.num_rounds
+    eval_mask = _eval_mask(T, eval_every)
+    params_s, dev, bud, agg, eidx, eval_full, nb = _stack_plans(plans, bank, T)
+
+    final_s, bits_stk, accs_st = fl_engine.run_horizon_vmapped(
+        params_s,
+        jnp.asarray(dev), jnp.asarray(bud), jnp.asarray(agg, jnp.float32),
+        jnp.asarray(eval_mask), jnp.asarray(eidx),
+        bank.xb, bank.yb, ebank.xe, ebank.ye,
+        nb=int(nb), **_horizon_statics(cfg, plans[0].payload, eval_full),
+    )
+    bits_np, accs_np = np.asarray(bits_stk), np.asarray(accs_st)
+    results = []
+    for s, plan in enumerate(plans):
+        fp = jax.tree_util.tree_map(lambda l, s=s: l[s], final_s)
+        results.append(_assemble_horizon_result(
+            plan, dataclasses.replace(cfg, seed=seeds[s]), uplink, eval_mask,
+            bits_np[s], accs_np[s], fp,
+        ))
+    return results
+
+
+def run_cell_sweep(
+    dataset,
+    shards: list,
+    cell: chan.CellConfig,
+    cfg: FLConfig,
+    *,
+    num_cells: int,
+    seeds_per_cell: int = 1,
+    uplink: str = "noma",
+    eval_every: int = 1,
+    cell_shards: Optional[int] = None,
+) -> list:
+    """A (cells x seeds) grid of independent simulations, cell axis sharded.
+
+    Each of the C * S instances is one scanned horizon with its own seed
+    (``cfg.seed + c * seeds_per_cell + s`` — cells are just disjoint seed
+    blocks of the same cell geometry; the draws differ, the physics config
+    doesn't).
+
+    With ``cell_shards > 1`` the stacked (C, S, ...) program runs under
+    ``shard_map`` over :func:`repro.launch.mesh.cell_mesh` (clamped to
+    ``jax.local_device_count()``), C padded up to a multiple of the mesh
+    (repeating leading cells, unpadded on return) — each mesh device runs
+    its own block of vmapped horizons in parallel.  On a trivial 1-device
+    mesh (the default) the sweep instead dispatches one
+    :func:`fl_engine.run_horizon` program per instance: all instances
+    share the bank, the test set and ONE compiled scan (sweep-wide static
+    shapes), and on a single core the sequential dispatches beat the
+    double-vmapped program, whose instance-batched per-round gathers blow
+    the cache with no parallelism in return (BENCH_cells.json).  Both
+    paths produce identical results (pinned by tests/test_fl_scan.py).
+
+    Returns ``results[c][s]`` :class:`FLResult` grids.
+    """
+    C, S = int(num_cells), int(seeds_per_cell)
+    if C < 1 or S < 1:
+        raise ValueError(f"need num_cells >= 1 and seeds_per_cell >= 1, "
+                         f"got ({num_cells}, {seeds_per_cell})")
+    shards_n = 1 if cell_shards is None else max(
+        1, min(int(cell_shards), jax.local_device_count())
+    )
+
+    inst_seeds = [[cfg.seed + c * S + s for s in range(S)] for c in range(C)]
+    plans = [
+        [
+            _horizon_setup(
+                dataset, shards, cell,
+                dataclasses.replace(cfg, seed=inst_seeds[c][s]), uplink, None,
+            )
+            for s in range(S)
+        ]
+        for c in range(C)
+    ]
+    bank = ClientBank.build(
+        dataset.x_train, dataset.y_train, shards, cfg.batch_size
+    )
+    ebank = EvalBank.build(dataset.x_test, dataset.y_test)
+
+    T = cfg.num_rounds
+    eval_mask = _eval_mask(T, eval_every)
+    flat = [p for row in plans for p in row]
+    params_f, dev, bud, agg, eidx, eval_full, nb = _stack_plans(flat, bank, T)
+    statics = _horizon_statics(cfg, flat[0].payload, eval_full)
+
+    if shards_n == 1:
+        # Single-device fast path: one run_horizon dispatch per instance.
+        # Sweep-wide nb keeps the shapes static, so every instance reuses
+        # the first one's compiled program.
+        emask_j = jnp.asarray(eval_mask)
+        results = []
+        for c in range(C):
+            row = []
+            for s in range(S):
+                i = c * S + s
+                final, bits_tk, accs_t = fl_engine.run_horizon(
+                    flat[i].params0,
+                    jnp.asarray(dev[i]), jnp.asarray(bud[i]),
+                    jnp.asarray(agg[i], jnp.float32),
+                    emask_j, jnp.asarray(eidx[i]),
+                    bank.xb, bank.yb, ebank.xe, ebank.ye,
+                    nb=int(nb), **statics,
+                )
+                row.append(_assemble_horizon_result(
+                    flat[i], dataclasses.replace(cfg, seed=inst_seeds[c][s]),
+                    uplink, eval_mask, np.asarray(bits_tk),
+                    np.asarray(accs_t), final,
+                ))
+            results.append(row)
+        return results
+
+    def cs(a):
+        return a.reshape(C, S, *a.shape[1:])
+
+    dev, bud, agg, eidx = cs(dev), cs(bud), cs(agg), cs(eidx)
+    params_cs = jax.tree_util.tree_map(
+        lambda l: l.reshape(C, S, *l.shape[1:]), params_f
+    )
+    pad = (-C) % shards_n
+    if pad:
+        # shard_map needs C divisible by the mesh: repeat leading cells
+        # (their results are sliced off below, so the waste is bounded by
+        # shards - 1 duplicate cell programs)
+        dev = np.concatenate([dev, dev[:pad]])
+        bud = np.concatenate([bud, bud[:pad]])
+        agg = np.concatenate([agg, agg[:pad]])
+        eidx = np.concatenate([eidx, eidx[:pad]])
+        params_cs = jax.tree_util.tree_map(
+            lambda l: jnp.concatenate([l, l[:pad]]), params_cs
+        )
+
+    final_cs, bits_cstk, accs_cst = fl_engine.run_horizon_sharded(
+        params_cs,
+        jnp.asarray(dev), jnp.asarray(bud), jnp.asarray(agg, jnp.float32),
+        jnp.asarray(eval_mask), jnp.asarray(eidx),
+        bank.xb, bank.yb, ebank.xe, ebank.ye,
+        shards=shards_n, nb=int(nb), **statics,
+    )
+    bits_np = np.asarray(bits_cstk)[:C]
+    accs_np = np.asarray(accs_cst)[:C]
+    results = []
+    for c in range(C):
+        row = []
+        for s in range(S):
+            fp = jax.tree_util.tree_map(
+                lambda l, c=c, s=s: l[c, s], final_cs
+            )
+            row.append(_assemble_horizon_result(
+                plans[c][s],
+                dataclasses.replace(cfg, seed=inst_seeds[c][s]), uplink,
+                eval_mask, bits_np[c, s], accs_np[c, s], fp,
+            ))
+        results.append(row)
+    return results

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quantization as qlib
-from repro.data.client_bank import ClientBank
+from repro.data.client_bank import ClientBank, EvalBank, eval_sample_plan
 from repro.kernels.aggregate import weighted_aggregate_pallas
 from repro.models import lenet
 
@@ -54,6 +54,15 @@ ENGINES = ("legacy", "batched")
 # run_federated_learning round-body implementations; FLConfig validates
 # ``fl_engine`` against this tuple.  "legacy" is the per-device host loop
 # (the oracle), "batched" this module's one-dispatch-per-round engine.
+
+HORIZON_MODES = ("per-round", "scan")
+# fl.py driver modes; FLConfig validates ``horizon`` against this tuple.
+# "per-round" dispatches one round at a time from the host (the only mode
+# online policies can run under — they need live FL-state feedback);
+# "scan" folds a precomputed-schedule horizon into ONE device program
+# (:func:`run_horizon` — a lax.scan over rounds), vmappable over seeds
+# (:func:`run_horizon_vmapped`) and shardable over a cell mesh
+# (:func:`run_horizon_sharded`).
 
 
 # --------------------------------------------------------------------------
@@ -129,29 +138,24 @@ def _pallas_aggregate_leaf(leaf, bits_k, agg_w, *, compress, paper_exact):
     return out.reshape(leaf.shape[1:])
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "nb", "lr", "epochs", "payload", "compress", "paper_exact",
-        "use_pallas", "need_norms",
-    ),
-)
-def _round_step(
-    params, xb, yb, dev_idx, budgets, agg_w,
-    *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, need_norms,
+def _train_quantize_aggregate(
+    params, x, y, budgets, agg_w,
+    *, lr, epochs, payload, compress, paper_exact, use_pallas, need_norms,
 ):
-    """gather -> vmapped local SGD -> norms -> quantize -> aggregate.
+    """The round body on gathered client rows: vmapped local SGD -> norms ->
+    traced per-client quantization -> weighted aggregation.
 
-    Returns (new_params, bits (K,) int32, norms (K,) f32; zeros unless
-    ``need_norms``).  ``nb`` slices the bank's global batch grid down to the
-    scheduled group's own max batch count (host-known per round), so the
-    scan never pays for the cell-wide largest shard; batches past a client's
-    own count are still all-padding and contribute exactly-zero gradients.
-    Retraces once per distinct (group size K, nb) pair.
+    x: (K, nb, BS, D); y: (K, nb, BS).  The single implementation behind
+    both the per-round jit (:func:`_round_step` gathers then calls this)
+    and the scanned horizon (:func:`_horizon_core` calls it inside the
+    ``lax.scan`` body) — the two drivers apply the identical update math,
+    which is what the scan-vs-per-round equality grid pins.  Returns
+    (new_params, bits (K,) int32, norms (K,) f32; zeros unless
+    ``need_norms``).  Zero-weight rows (``agg_w[k] = 0``: schedule padding
+    in the scan path) still train but contribute exactly zero to the
+    aggregate, so padded tail/empty rounds leave the parameters untouched.
     """
-    x = xb[dev_idx, :nb]                 # (K, nb, BS, D)
-    y = yb[dev_idx, :nb]                 # (K, nb, BS)
-    k = dev_idx.shape[0]
+    k = x.shape[0]
 
     def local_delta(xk, yk):
         new = params
@@ -220,9 +224,224 @@ def _round_step(
     return new_params, bits, norms
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "nb", "lr", "epochs", "payload", "compress", "paper_exact",
+        "use_pallas", "need_norms",
+    ),
+)
+def _round_step(
+    params, xb, yb, dev_idx, budgets, agg_w,
+    *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, need_norms,
+):
+    """gather -> shared round body (:func:`_train_quantize_aggregate`).
+
+    ``nb`` slices the bank's global batch grid down to the scheduled
+    group's own max batch count (host-known per round), so the scan never
+    pays for the cell-wide largest shard; batches past a client's own
+    count are still all-padding and contribute exactly-zero gradients.
+    Retraces once per distinct (group size K, nb) pair.
+    """
+    x = xb[dev_idx, :nb]                 # (K, nb, BS, D)
+    y = yb[dev_idx, :nb]                 # (K, nb, BS)
+    return _train_quantize_aggregate(
+        params, x, y, budgets, agg_w, lr=lr, epochs=epochs, payload=payload,
+        compress=compress, paper_exact=paper_exact, use_pallas=use_pallas,
+        need_norms=need_norms,
+    )
+
+
+# --------------------------------------------------------------------------
+# Scanned horizon: the whole precomputed-schedule simulation as ONE program
+# --------------------------------------------------------------------------
+
+_HORIZON_STATICS = (
+    "nb", "lr", "epochs", "payload", "compress", "paper_exact", "use_pallas",
+    "eval_full",
+)
+
+
+def _horizon_core(
+    params, dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn, xb, yb,
+    xe, ye,
+    *, lr, epochs, payload, compress, paper_exact, use_pallas, eval_full,
+):
+    """One whole horizon as a single ``lax.scan`` over rounds.
+
+    The carry is the model parameters; per-round inputs are the
+    precomputed-schedule tensors the fl.py driver packed on the host —
+    dev_tk (T, K) int32 device ids (0-padded past each round's true group
+    size), budgets_tk (T, K) f32 uplink bit budgets, agg_tk (T, K) f32
+    FedAvg weights (zero on padding, which multiplies the padded rows out
+    of the aggregate exactly), eval_mask_t (T,) bool, and eval_idx_tn
+    (T, n) eval-row gather plans (ignored when ``eval_full``).  Emits the
+    per-round (T, K) bit-widths and (T,) sampled test accuracies (NaN on
+    rounds ``eval_mask_t`` skips — the host forward-fills, mirroring the
+    per-round driver's repeated-accuracy logging under ``eval_every``).
+
+    Un-jitted on purpose: :func:`run_horizon` jits it directly,
+    :func:`run_horizon_vmapped` vmaps it over a seeds axis, and
+    :func:`run_horizon_sharded` additionally shards a leading cell axis
+    over a mesh — one implementation under all three transforms.
+    """
+
+    def body(p, inp):
+        dev, bud, w, do_eval, eidx = inp
+        x = xb[dev]                     # (K, nb, BS, D)
+        y = yb[dev]                     # (K, nb, BS)
+        p2, bits, _ = _train_quantize_aggregate(
+            p, x, y, bud, w, lr=lr, epochs=epochs, payload=payload,
+            compress=compress, paper_exact=paper_exact,
+            use_pallas=use_pallas, need_norms=False,
+        )
+
+        def ev(q):
+            if eval_full:
+                return lenet.accuracy(q, xe, ye)
+            return lenet.accuracy(q, xe[eidx], ye[eidx])
+
+        acc = jax.lax.cond(
+            do_eval, ev, lambda q: jnp.asarray(jnp.nan, jnp.float32), p2
+        )
+        return p2, (bits, acc)
+
+    final, (bits_t, acc_t) = jax.lax.scan(
+        body, params,
+        (dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn),
+    )
+    return final, bits_t, acc_t
+
+
+@functools.partial(jax.jit, static_argnames=_HORIZON_STATICS)
+def run_horizon(
+    params, dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn, xb, yb,
+    xe, ye,
+    *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, eval_full,
+):
+    """One precomputed-schedule horizon, one dispatch (see _horizon_core).
+
+    ``nb`` slices the bank's batch grid to the horizon-wide max scheduled
+    batch count (host-known, static) — the scan's shapes are fixed across
+    rounds, so the per-round driver's per-group slicing becomes a single
+    horizon-level slice; the extra all-padding batches contribute
+    exactly-zero gradients.
+    """
+    return _horizon_core(
+        params, dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn,
+        xb[:, :nb], yb[:, :nb], xe, ye,
+        lr=lr, epochs=epochs, payload=payload, compress=compress,
+        paper_exact=paper_exact, use_pallas=use_pallas, eval_full=eval_full,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=_HORIZON_STATICS)
+def run_horizon_vmapped(
+    params_s, dev_stk, budgets_stk, agg_stk, eval_mask_t, eval_idx_stn,
+    xb, yb, xe, ye,
+    *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, eval_full,
+):
+    """A whole seed sweep (S independent horizons), one dispatch.
+
+    Leading axis S on params / schedule tensors / eval plans; the client
+    bank and test set are shared (the sweep varies channel draws, model
+    init and schedules — not the data).  ``eval_mask_t`` is shared too
+    (eval cadence is a config, not a draw).  Row s is the same program
+    :func:`run_horizon` runs for that seed alone.
+    """
+    xbs, ybs = xb[:, :nb], yb[:, :nb]
+
+    def one(p, d, b, a, ei):
+        return _horizon_core(
+            p, d, b, a, eval_mask_t, ei, xbs, ybs, xe, ye,
+            lr=lr, epochs=epochs, payload=payload, compress=compress,
+            paper_exact=paper_exact, use_pallas=use_pallas,
+            eval_full=eval_full,
+        )
+
+    return jax.vmap(one)(params_s, dev_stk, budgets_stk, agg_stk, eval_idx_stn)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_horizon_fn(
+    shards, nb, lr, epochs, payload, compress, paper_exact, use_pallas,
+    eval_full,
+):
+    """Build (and cache) the jitted shard_map'd cell sweep for a mesh of
+    ``shards`` local devices (the scheduler's vertex-reduction pattern,
+    reapplied to whole simulations).  Only the leading cell axis is
+    sharded; the client bank / test set are replicated and the cells never
+    communicate — each mesh device runs its own (C/shards, S) block of
+    vmapped horizons."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import cell_mesh
+    from repro.sharding import rules
+
+    mesh = cell_mesh(shards)
+    axis = rules.CELL_AXIS
+
+    def fn(params_cs, dev, bud, agg, emask, eidx, xb, yb, xe, ye):
+        xbs, ybs = xb[:, :nb], yb[:, :nb]
+
+        def per_seed(p, d, b, a, ei):
+            return _horizon_core(
+                p, d, b, a, emask, ei, xbs, ybs, xe, ye,
+                lr=lr, epochs=epochs, payload=payload, compress=compress,
+                paper_exact=paper_exact, use_pallas=use_pallas,
+                eval_full=eval_full,
+            )
+
+        def per_cell(p, d, b, a, ei):
+            return jax.vmap(per_seed)(p, d, b, a, ei)
+
+        return jax.vmap(per_cell)(params_cs, dev, bud, agg, eidx)
+
+    return jax.jit(shard_map(
+        fn, mesh=mesh,
+        in_specs=rules.cell_sweep_in_specs(),
+        out_specs=rules.cell_sweep_out_specs(),
+        check_rep=False,
+    ))
+
+
+def run_horizon_sharded(
+    params_cs, dev_cstk, budgets_cstk, agg_cstk, eval_mask_t, eval_idx_cstn,
+    xb, yb, xe, ye,
+    *, shards, nb, lr, epochs, payload, compress, paper_exact, use_pallas,
+    eval_full,
+):
+    """A (C, S) cells-x-seeds sweep with the cell axis sharded over a mesh.
+
+    C must be a multiple of ``shards`` (the fl.py driver pads and
+    unpads).  With ``shards = 1`` this is exactly the double-vmapped
+    single-device program, which the sharded-equality test pins the
+    multi-device meshes against.
+    """
+    fn = _sharded_horizon_fn(
+        int(shards), int(nb), float(lr), int(epochs), int(payload),
+        bool(compress), bool(paper_exact), bool(use_pallas), bool(eval_full),
+    )
+    return fn(
+        params_cs, dev_cstk, budgets_cstk, agg_cstk, eval_mask_t,
+        eval_idx_cstn, xb, yb, xe, ye,
+    )
+
+
 # --------------------------------------------------------------------------
 # Engine front-end (what the fl driver calls)
 # --------------------------------------------------------------------------
+
+_eval_full = jax.jit(lenet.accuracy)
+
+
+@jax.jit
+def _eval_sampled(params, xe, ye, idx):
+    """Client-sampled test accuracy: gather the round's eval rows, forward
+    once — the ClientBank gather idiom applied to evaluation."""
+    return lenet.accuracy(params, xe[idx], ye[idx])
+
 
 class BatchedRoundEngine:
     """Round-body engine: builds the bank once, then one dispatch per round."""
@@ -233,6 +452,30 @@ class BatchedRoundEngine:
         self.bank = ClientBank.build(
             dataset.x_train, dataset.y_train, shards, cfg.batch_size
         )
+        # Evaluation through the same gather idiom: test set resident on
+        # device, per-round sampled rows precomputed (None = full eval,
+        # bit-identical to lenet.accuracy over the raw test arrays).
+        self.eval_bank = EvalBank.build(dataset.x_test, dataset.y_test)
+        self._eval_idx = eval_sample_plan(
+            self.eval_bank.num_samples, cfg.eval_sample, cfg.num_rounds,
+            cfg.seed,
+        )
+
+    def evaluate(self, params, t: int) -> float:
+        """Test accuracy after round t (sampled per ``FLConfig.eval_sample``).
+
+        At ``eval_sample = 1`` this is the full-test-set accuracy, equal
+        bit for bit to the legacy driver's ``lenet.accuracy`` call; below 1
+        it evaluates the round's precomputed sample of test rows — the same
+        (T, n) plan the scanned horizon consumes, so the two drivers report
+        identical sampled accuracies.
+        """
+        if self._eval_idx is None:
+            return float(_eval_full(params, self.eval_bank.xe, self.eval_bank.ye))
+        return float(_eval_sampled(
+            params, self.eval_bank.xe, self.eval_bank.ye,
+            jnp.asarray(self._eval_idx[t]),
+        ))
 
     def run_round(self, params, devs, budgets, agg_w, *, need_norms: bool):
         """Run one round's local training + upload + aggregation.

@@ -955,6 +955,18 @@ def available_policies() -> tuple:
     return tuple(sorted(_REGISTRY))
 
 
+def policy_is_online(name: str) -> bool:
+    """Whether the policy registered under ``name`` selects from live FL
+    state (``online = True``).
+
+    The horizon-mode gate: online policies need host-loop feedback every
+    round, so they can only run under ``FLConfig.horizon = "per-round"`` —
+    config validation and the scanned driver both ask this one question.
+    Raises ValueError for unregistered names (same as :func:`get_policy`).
+    """
+    return bool(getattr(get_policy(name), "online", False))
+
+
 def build_schedule(
     policy: "SchedulerPolicy", gains_tm, weights_m, cfg: PolicyConfig
 ) -> Schedule:

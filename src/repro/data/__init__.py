@@ -1,4 +1,4 @@
-from repro.data.client_bank import ClientBank
+from repro.data.client_bank import ClientBank, EvalBank, eval_sample_plan
 from repro.data.mnist_like import make_mnist_like
 from repro.data.partition import dirichlet_partition
 from repro.data.tokens import TokenStream, synthetic_token_batches

@@ -18,6 +18,13 @@ parameters untouched.
 Memory: the bank is the dataset re-laid-out per device plus padding up to
 the *largest* shard's batch count, i.e. O(M * max_k ceil(|D_k|/bs) * bs * D)
 floats — at paper scale (M=300, MNIST-like) tens of MB.
+
+The same gather idiom serves per-round *evaluation*: :class:`EvalBank`
+keeps the test set resident on device, and :func:`eval_sample_plan`
+precomputes a seeded (T, n) row-index plan so a client-sampled eval is one
+gather + batched forward inside the jitted round step (or the scanned
+horizon) — with ``frac = 1`` the gather is skipped entirely and the eval
+is bit-identical to the full-test-set ``lenet.accuracy`` call it replaces.
 """
 from __future__ import annotations
 
@@ -26,6 +33,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+EVAL_SEED_OFFSET = 23
+# decorrelates the eval-sampling stream from the model-init / channel /
+# scheduling streams that consume FLConfig.seed (the scheduling permutation
+# already claims +17 — see scheduling.RandomPolicy.SEED_OFFSET)
 
 
 @dataclasses.dataclass
@@ -85,3 +97,45 @@ class ClientBank:
             yb=jnp.asarray(yb.reshape(m, nb, bs)),
             sizes=sizes,
         )
+
+
+@dataclasses.dataclass
+class EvalBank:
+    """The test set, resident on device for gathered per-round evaluation.
+
+    No padding: a sampled eval gathers exactly ``n`` rows (fixed shape per
+    horizon), so the masked-accuracy bookkeeping the training bank needs
+    never enters the eval path and the ``frac = 1`` case stays bit-identical
+    to ``lenet.accuracy`` over the raw arrays.
+    """
+
+    xe: jax.Array        # (N, D)
+    ye: jax.Array        # (N,)
+
+    @property
+    def num_samples(self) -> int:
+        return self.xe.shape[0]
+
+    @classmethod
+    def build(cls, x_test: np.ndarray, y_test: np.ndarray) -> "EvalBank":
+        return cls(xe=jnp.asarray(x_test), ye=jnp.asarray(y_test))
+
+
+def eval_sample_plan(
+    num_test: int, frac: float, num_rounds: int, seed: int
+) -> "np.ndarray | None":
+    """Seeded (T, n) eval-row gather plan, or ``None`` for a full eval.
+
+    One draw per round for *every* round (not only eval rounds), so the
+    per-round driver and the scanned horizon — which may skip different
+    rounds under ``eval_every`` — index an identical plan at matching ``t``
+    and report identical sampled accuracies.  n = ceil(frac * N), without
+    replacement within a round.
+    """
+    if frac >= 1.0:
+        return None
+    n = max(1, int(np.ceil(frac * num_test)))
+    rng = np.random.default_rng(seed + EVAL_SEED_OFFSET)
+    return np.stack(
+        [rng.choice(num_test, size=n, replace=False) for _ in range(num_rounds)]
+    ).astype(np.int32)

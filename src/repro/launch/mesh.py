@@ -19,3 +19,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_smoke_mesh(devices=None):
     """1-device mesh with the same axis names (CPU tests)."""
     return jax.make_mesh((1, 1), ("data", "model"), devices=devices)
+
+
+def cell_mesh(shards: int):
+    """1-D mesh of the first ``shards`` local devices over the FL
+    simulator's cell axis (``repro.sharding.rules.CELL_AXIS``).
+
+    The multi-cell sweep shards whole independent simulations over it
+    (``fl_engine.run_horizon_sharded``); like the scheduler's vertex mesh,
+    callers clamp ``shards`` to the local device count rather than failing.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.sharding.rules import CELL_AXIS
+
+    if not 1 <= shards <= jax.local_device_count():
+        raise ValueError(
+            f"cell_mesh needs 1 <= shards <= {jax.local_device_count()} "
+            f"local devices (got {shards})"
+        )
+    return Mesh(np.asarray(jax.local_devices()[:shards]), (CELL_AXIS,))

@@ -128,3 +128,32 @@ def cache_pspec(mesh: Mesh, cache_shape, *, stacked_dims: int = 1) -> P:
 
 def named(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
+
+
+# --------------------------------------------------------------------------
+# FL simulator cell axis (the scheduler's vertex-mesh sibling)
+# --------------------------------------------------------------------------
+
+CELL_AXIS = "cell"
+# The multi-cell FL sweep's mesh axis (repro.launch.mesh.cell_mesh): whole
+# independent simulations — (params, schedule tensors, eval plans) stacked
+# (C, S, ...) — are sharded over it; cells never communicate.
+
+
+def cell_sweep_in_specs() -> tuple:
+    """in_specs for the shard_map'd cell sweep (fl_engine.run_horizon_sharded).
+
+    Positional contract: (params_cs, dev, budgets, agg_w, eval_mask,
+    eval_idx, xb, yb, xe, ye) — per-instance stacks shard their leading
+    cell axis; the eval cadence mask, the client bank, and the test set
+    are replicated.
+    """
+    c = P(CELL_AXIS)
+    r = P()
+    return (c, c, c, c, r, c, r, r, r, r)
+
+
+def cell_sweep_out_specs() -> tuple:
+    """out_specs: (final params, bits, accuracies), all cell-stacked."""
+    c = P(CELL_AXIS)
+    return (c, c, c)

@@ -143,3 +143,70 @@ def test_unknown_engine_rejected_at_config_time():
     with pytest.raises(ValueError, match="unknown fl_engine"):
         FLConfig(num_devices=4, group_size=2, num_rounds=2,
                  fl_engine="warp-drive")
+
+
+def test_evalbank_full_eval_matches_legacy(tiny_world):
+    """engine.evaluate at eval_sample = 1.0 routes through the EvalBank but
+    must equal the legacy driver's lenet.accuracy over the raw test arrays
+    bit for bit (same arrays, same jitted computation)."""
+    import jax.numpy as jnp
+
+    from repro.core import fl_engine
+    from repro.models import lenet
+    from repro.models.params import init_params
+
+    ds, cell, shards = tiny_world
+    cfg = FLConfig(num_devices=4, group_size=2, num_rounds=3,
+                   fl_engine="batched", seed=0)
+    engine = fl_engine.BatchedRoundEngine(ds, shards, cfg, payload_bits=32)
+    params = init_params(lenet.schema(), jax.random.PRNGKey(0))
+    want = float(jax.jit(lenet.accuracy)(
+        params, jnp.asarray(ds.x_test), jnp.asarray(ds.y_test)))
+    for t in range(cfg.num_rounds):
+        assert engine.evaluate(params, t) == want
+
+
+def test_evalbank_sampled_eval_deterministic_and_plan_shaped(tiny_world):
+    """eval_sample < 1: per-round precomputed sample plans — deterministic
+    across engine rebuilds (seeded), ceil(frac * N) rows each, rounds
+    differ, and the run's schedules/bits are unaffected (eval never feeds
+    back into training)."""
+    import numpy as np
+
+    from repro.core import fl_engine
+    from repro.data import eval_sample_plan
+
+    ds, cell, shards = tiny_world
+    cfg = FLConfig(num_devices=4, group_size=2, num_rounds=3,
+                   fl_engine="batched", eval_sample=0.5, seed=0)
+    e1 = fl_engine.BatchedRoundEngine(ds, shards, cfg, payload_bits=32)
+    e2 = fl_engine.BatchedRoundEngine(ds, shards, cfg, payload_bits=32)
+    n_test = len(ds.y_test)
+    assert e1._eval_idx.shape == (3, int(np.ceil(0.5 * n_test)))
+    np.testing.assert_array_equal(e1._eval_idx, e2._eval_idx)
+    assert not np.array_equal(e1._eval_idx[0], e1._eval_idx[1])
+    for t in range(3):  # without-replacement draw within each round
+        assert len(set(e1._eval_idx[t].tolist())) == e1._eval_idx.shape[1]
+    # the plan helper is the single owner both drivers share
+    np.testing.assert_array_equal(
+        e1._eval_idx, eval_sample_plan(n_test, 0.5, 3, 0))
+    # training itself is untouched by sampled eval
+    full = _run(tiny_world, "batched", m=4, group_size=2, rounds=3,
+                scheduler="round-robin")
+    ds2, cell2, shards2 = tiny_world
+    cfg_s = FLConfig(num_devices=4, group_size=2, num_rounds=3,
+                     scheduler="round-robin", power_mode="max",
+                     fl_engine="batched", eval_sample=0.5, seed=0)
+    sampled = fl.run_federated_learning(ds2, shards2, cell2, cfg_s)
+    assert ([l.devices for l in full.logs]
+            == [l.devices for l in sampled.logs])
+    for lf, ls in zip(full.logs, sampled.logs):
+        np.testing.assert_array_equal(lf.bits, ls.bits)
+
+
+def test_eval_sample_rejected_for_legacy_engine():
+    with pytest.raises(ValueError, match="eval_sample < 1 requires"):
+        FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                 fl_engine="legacy", eval_sample=0.5)
+    with pytest.raises(ValueError, match="eval_sample must be in"):
+        FLConfig(num_devices=4, group_size=2, num_rounds=2, eval_sample=0.0)
