@@ -18,8 +18,10 @@ The scheduling, fl_engine and fl_cells suites additionally return sweep
 records that are persisted at the repo root (``BENCH_scheduling.json``: M
 sweep x numpy/jax scheduler backend; ``BENCH_fl.json``: K x M round-loop
 sweep, legacy vs batched FL engine; ``BENCH_cells.json``: cells x seeds x M
-sweep, scanned grid vs sequential per-round dispatch) so the perf
-trajectories are tracked from PR to PR.
+sweep, scanned grid vs sequential per-round dispatch;
+``BENCH_payload.json``: transformer-class payload-size sweep, chunked
+Pallas aggregation vs XLA einsum) so the perf trajectories are tracked
+from PR to PR.
 """
 from __future__ import annotations
 
@@ -38,6 +40,7 @@ SUITES = [
     ("compression", "benchmarks.compression_stats"),  # §II-B adaptive bits
     ("fl_engine", "benchmarks.fl_bench"),          # legacy vs batched round loop
     ("fl_cells", "benchmarks.fl_bench:cells_main"),  # scanned cells x seeds sweep
+    ("payload", "benchmarks.payload_bench"),       # LLM-scale aggregation
     ("fig5", "benchmarks.fig5_noma_vs_tdma"),      # Fig. 5
     ("fig6", "benchmarks.fig6_schemes"),           # Fig. 6
     ("roofline", "benchmarks.roofline_bench"),     # EXPERIMENTS §Roofline
@@ -56,6 +59,7 @@ PERSIST = {
     "scheduling": "BENCH_scheduling",
     "fl_engine": "BENCH_fl",
     "fl_cells": "BENCH_cells",
+    "payload": "BENCH_payload",
 }
 
 # --check-regression: per-suite wall-time metrics (everything else in a
@@ -67,6 +71,7 @@ REGRESSION_METRICS = {
     "fl_engine": ("legacy_s_per_round", "batched_s_per_round"),
     "fl_cells": ("scan_sweep_s", "per_round_legacy_sweep_s",
                  "per_round_batched_sweep_s"),
+    "payload": ("einsum_s", "pallas_chunked_s"),
 }
 REGRESSION_THRESHOLD = 1.20
 

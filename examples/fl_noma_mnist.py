@@ -5,7 +5,8 @@ Fig. 5 / Fig. 6 settings.
     PYTHONPATH=src python examples/fl_noma_mnist.py [--fast] \
         [--scheduler NAME] [--power mapel|max] [--uplink noma|tdma] \
         [--engine batched|legacy] [--pallas-agg] \
-        [--horizon per-round|scan] [--seeds N]
+        [--horizon per-round|scan] [--seeds N] \
+        [--model NAME] [--topk FRAC]
 
 ``--scheduler`` accepts any registered policy name (see
 ``repro.core.scheduling``): the paper's precomputed schedulers
@@ -34,6 +35,29 @@ and reports the mean/std final accuracy; it implies ``--horizon scan``.
 Multi-cell grids with the cell axis sharded over a device mesh live in
 ``fl.run_cell_sweep`` (BENCH_cells.json tracks the sweep speedup).
 
+Model and compression flags (the model-agnostic payload path):
+
+``--model`` picks the FL payload (``FLConfig.model``, resolved through
+``repro.models.fl_models``): ``lenet`` (default — the paper's
+LeNet-300-100 on MNIST-like images, bit-identical to the historical
+hardcoded path), ``tiny-transformer`` / ``tiny-transformer-1m`` (dense
+next-token transformers; the ``-1m`` variant is the >=10^6-param
+transformer-class payload), or any ``repro.configs`` arch id such as
+``qwen2_0_5b:smoke``.  Token models train on a synthetic next-token
+corpus (``repro.data.tokens.make_token_dataset``) partitioned with the
+same Dirichlet non-iid machinery as the image path.
+
+``--topk`` (< 1.0) turns on top-k sparsification before DoReFa: each
+client keeps only the affordable top fraction of update coordinates
+under its §IV bit budget (``compression.topk_plan``) and the logged
+compression ratios become the honest sparse on-air ratios I / S_k.
+Requires the batched engine or the scan horizon (the legacy oracle loop
+stays dense).  Example — a transformer-class payload with 1% top-k over
+the scanned horizon:
+
+    PYTHONPATH=src python examples/fl_noma_mnist.py --fast \
+        --model tiny-transformer-1m --topk 0.01 --horizon scan
+
 Takes ~10-20 min at full scale on this CPU (legacy engine; the batched
 engine cuts the round-loop time severalfold); --fast runs M=60, T=10.
 """
@@ -44,6 +68,8 @@ import numpy as np
 from repro.config import FLConfig
 from repro.core import channel, fl, scheduling
 from repro.data import dirichlet_partition, make_mnist_like
+from repro.data.tokens import make_token_dataset
+from repro.models.fl_models import get_fl_model
 
 
 def main():
@@ -65,6 +91,14 @@ def main():
                     help="sweep N seeds through one vmapped scan program "
                          "(implies --horizon scan)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model", default="lenet",
+                    help="FL payload (FLConfig.model): lenet, "
+                         "tiny-transformer, tiny-transformer-1m, or a "
+                         "repro.configs arch id ('<id>' / '<id>:smoke')")
+    ap.add_argument("--topk", type=float, default=1.0,
+                    help="top-k sparsification cap before DoReFa "
+                         "(fraction of coordinates kept; 1.0 = dense; "
+                         "batched engine / scan horizon only)")
     args = ap.parse_args()
     if args.seeds is not None:
         args.horizon = "scan"
@@ -72,21 +106,34 @@ def main():
     m = 60 if args.fast else 300              # paper: M = 300
     t = args.rounds or (10 if args.fast else 35)  # paper: T = 35
 
-    ds = make_mnist_like(num_samples=4000 if args.fast else 12_000,
-                         seed=args.seed)
+    model = get_fl_model(args.model)
+    if model.kind == "tokens":
+        # synthetic next-token corpus, Dirichlet-partitioned by the rows'
+        # pseudo-class so the non-iid shard machinery matches the image path
+        ds = make_token_dataset(
+            vocab_size=model.cfg.vocab_size,
+            num_samples=4000 if args.fast else 12_000,
+            seq_len=16, seed=args.seed)
+        part_labels = ds.class_train
+    else:
+        ds = make_mnist_like(num_samples=4000 if args.fast else 12_000,
+                             seed=args.seed)
+        part_labels = ds.y_train
     cell = channel.CellConfig(num_devices=m)   # paper §IV cell parameters
-    shards = dirichlet_partition(ds.y_train, m, seed=args.seed)
+    shards = dirichlet_partition(part_labels, m, seed=args.seed)
     cfg = FLConfig(num_devices=m, group_size=3, num_rounds=t,
                    learning_rate=0.01, batch_size=10,   # Table I
                    scheduler=args.scheduler, power_mode=args.power,
                    compression="adaptive", fl_engine=args.engine,
                    use_pallas=args.pallas_agg, horizon=args.horizon,
+                   model=args.model, topk=args.topk,
                    seed=args.seed)
 
     online = scheduling.get_policy(args.scheduler).online
     print(f"M={m} K=3 T={t} scheduler={args.scheduler} power={args.power} "
           f"uplink={args.uplink} engine={args.engine} "
-          f"horizon={args.horizon} "
+          f"horizon={args.horizon} model={args.model} "
+          f"{'topk=' + format(args.topk, '.2f') + ' ' if args.topk < 1 else ''}"
           f"mode={'online (live)' if online else 'precomputed'}")
 
     if args.seeds is not None:

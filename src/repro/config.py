@@ -187,6 +187,24 @@ class FLConfig:
                                      # engine + scan horizon); 1.0 = full
                                      # test set, bit-identical to the legacy
                                      # lenet.accuracy eval
+    model: str = "lenet"             # FL payload: any repro.models.fl_models
+                                     # name ("lenet", "tiny-transformer",
+                                     # "tiny-transformer-1m", or any
+                                     # repro.configs arch id / "<id>:smoke").
+                                     # "lenet" is bit-identical to the
+                                     # historical hardcoded path.
+    topk: float = 1.0                # sparsification stage before DoReFa:
+                                     # cap on the kept-coordinate fraction
+                                     # per client (traced k from the §IV bit
+                                     # budgets, see compression.topk_plan);
+                                     # 1.0 = dense (off). Batched engine /
+                                     # scan horizon only.
+    client_bank: str = "padded"      # padded (one dense (M, NB, ...) bank,
+                                     # NB = global max batches) | bucketed
+                                     # (size-bucketed banks, pow-2 batch
+                                     # counts — skewed Dirichlet shards stop
+                                     # padding to the global max; batched
+                                     # per-round engine only)
     seed: int = 0
 
     def __post_init__(self):
@@ -258,4 +276,37 @@ class FLConfig:
                 "eval_sample < 1 requires fl_engine='batched' or "
                 "horizon='scan' (the legacy loop always evaluates the full "
                 "test set)"
+            )
+        from repro.models import fl_models
+
+        fl_models.get_fl_model(self.model)  # raises ValueError on unknown
+        if not 0.0 < self.topk <= 1.0:
+            raise ValueError(f"topk must be in (0, 1], got {self.topk}")
+        if (
+            self.topk < 1.0
+            and self.fl_engine == "legacy"
+            and self.horizon == "per-round"
+        ):
+            raise ValueError(
+                "topk < 1 requires fl_engine='batched' or horizon='scan' "
+                "(the legacy oracle loop is dense DoReFa only)"
+            )
+        if self.topk < 1.0 and self.compression != "adaptive":
+            raise ValueError(
+                "topk < 1 requires compression='adaptive': the sparse "
+                "(kept, bits) split is derived from the same per-client "
+                "bit budgets that drive the adaptive DoReFa widths"
+            )
+        if self.client_bank not in ("padded", "bucketed"):
+            raise ValueError(
+                f"unknown client_bank {self.client_bank!r}; "
+                f"known: ('padded', 'bucketed')"
+            )
+        if self.client_bank == "bucketed" and not (
+            self.fl_engine == "batched" and self.horizon == "per-round"
+        ):
+            raise ValueError(
+                "client_bank='bucketed' requires fl_engine='batched' with "
+                "horizon='per-round': the scan horizon indexes one dense "
+                "(M, NB, ...) bank inside the traced program"
             )

@@ -23,8 +23,91 @@ from repro.kernels import ops as kops
 
 
 def payload_bits(tree, *, full_bits: int = 32) -> int:
-    """Uncompressed payload size I in bits (paper: 32 bits/param)."""
+    """Uncompressed payload size I in bits (paper: 32 bits/param).
+
+    Pure Python-int arithmetic end to end: a 10^8-param tree at 32 bits
+    (~3.2e9) exceeds int32, so the count must never round-trip through a
+    32-bit dtype — downstream jnp consumers coerce through float
+    (``quantization._host_scalar_to_float``) instead of int.
+    """
     return sum(int(x.size) * full_bits for x in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification: a composable stage BEFORE DoReFa quantization.
+#
+# The §IV bit budget c_k = R_k * B * t that drives adaptive_bits_for_budget
+# also prices a sparse payload.  On-air encoding per kept coordinate: a
+# sign-magnitude DoReFa code (b+1 bits) plus a coordinate index
+# (ceil(log2 P) bits), plus one fp32 scale per client:
+#
+#     S_k = k_k * (b_k + 1 + idx_bits) + 32        (sparse on-air bits)
+#
+# The (k, b) split spends the budget on coverage first: k_k is the largest
+# kept count affordable at the 1-bit floor (b+1+idx = 2+idx bits/coord),
+# capped by the FLConfig.topk fraction, and the leftover per-coordinate
+# budget becomes the DoReFa width b_k.  Both are traced per client, exactly
+# like the dense adaptive bits.  Round timing stays slot-based (the paper's
+# Fig. 5 axis): sparsification changes what crosses the slot, not the slot
+# itself — the honest ratio I / S_k is logged alongside.
+# ---------------------------------------------------------------------------
+
+
+def topk_index_bits(num_params: int) -> int:
+    """Bits to address one coordinate of a P-param payload: ceil(log2 P)."""
+    if num_params < 1:
+        raise ValueError(f"num_params must be >= 1, got {num_params}")
+    return max(1, int(np.ceil(np.log2(num_params))))
+
+
+def topk_plan(num_params: int, budget_bits, *, topk: float = 1.0):
+    """Traced per-client (kept, bits) from the §IV budgets (paper Eq. 7 ext).
+
+    ``budget_bits``: (K,) traced or concrete slot budgets c_k.  Returns
+    ``(kept, bits)`` int32 (K,) vectors: kept coordinates k_k in
+    [1, ceil(topk * P)] and DoReFa width b_k in [1, 32].  Host ints stay
+    Python-int until the final float coercion (no int32 round-trip).
+    """
+    idx = topk_index_bits(num_params)
+    k_cap = max(1, int(np.ceil(topk * num_params)))
+    c = jnp.asarray(budget_bits, jnp.float32)
+    spend = jnp.maximum(c - 32.0, 0.0)  # fp32 scale off the top
+    kept = jnp.clip(
+        jnp.floor(spend / float(2 + idx)), 1.0, float(k_cap)
+    ).astype(jnp.int32)
+    bits = jnp.clip(
+        jnp.floor(spend / kept.astype(jnp.float32)) - float(1 + idx),
+        1.0, 32.0,
+    ).astype(jnp.int32)
+    return kept, bits
+
+
+def topk_mask(flat: jax.Array, kept) -> jax.Array:
+    """(K, N) magnitude top-k mask with traced per-row k (exact count).
+
+    Double-argsort ranks: ``ranks[i, j]`` is the magnitude rank of
+    coordinate j in row i (0 = largest; ties broken by position,
+    deterministically), and the mask keeps ranks < kept[i].  Supports the
+    edges kept=0 (all-zero row) and kept=N (identity).
+    """
+    order = jnp.argsort(-jnp.abs(flat), axis=1)
+    ranks = jnp.argsort(order, axis=1)
+    kept_col = jnp.asarray(kept, jnp.int32).reshape(-1, 1)
+    return (ranks < kept_col).astype(flat.dtype)
+
+
+def sparse_payload_bits(kept, bits, num_params: int):
+    """Honest on-air size S_k of a top-k + DoReFa payload (float64)."""
+    idx = topk_index_bits(num_params)
+    kept = np.asarray(kept, np.float64)
+    bits = np.asarray(bits, np.float64)
+    return kept * (bits + 1.0 + idx) + 32.0
+
+
+def sparse_compression_ratio(payload_bits_, kept, bits, num_params: int):
+    """r = max(I / S_k, 1) for the sparse payload (float64, host-side)."""
+    on_air = sparse_payload_bits(kept, bits, num_params)
+    return np.maximum(float(payload_bits_) / np.maximum(on_air, 1e-9), 1.0)
 
 
 @dataclasses.dataclass

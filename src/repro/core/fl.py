@@ -52,6 +52,7 @@ repro/launch/train.py (quantized-DSGD inside the pjit'd step).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Optional
 
@@ -65,7 +66,7 @@ from repro.core import compression, fl_engine, noma, scheduling
 from repro.core import power as power_lib
 from repro.core import quantization as qlib
 from repro.data.client_bank import ClientBank, EvalBank, eval_sample_plan
-from repro.models import lenet
+from repro.models.fl_models import get_fl_model
 from repro.utils.tree import tree_count
 
 
@@ -94,34 +95,39 @@ class FLResult:
 
 
 # --------------------------------------------------------------------------
-# Local training (LeNet on device shards)
+# Local training (the FLModel payload on device shards)
 # --------------------------------------------------------------------------
 
 # One jitted epoch per device — the same per-client math the batched engine
 # vmaps; the single implementation lives in fl_engine.sgd_epoch (``unroll``
-# is a scan parameter, hence static under jit).
-_sgd_epoch = jax.jit(fl_engine.sgd_epoch, static_argnames="unroll")
+# is a scan parameter and ``model`` a hashable FLModel, hence static).
+_sgd_epoch = jax.jit(fl_engine.sgd_epoch, static_argnames=("model", "unroll"))
 
 
-def local_update(params, xs, ys, cfg: FLConfig):
-    """Run local epochs; returns the model delta (new - old)."""
+def local_update(params, xs, ys, cfg: FLConfig, model):
+    """Run local epochs; returns the model delta (new - old).
+
+    Padding generalizes over the trailing feature/label shape: flat image
+    rows with scalar labels, or (S,) token rows with (S,) shifted labels —
+    pad positions always carry label -1, the shared validity convention.
+    """
     n = len(xs)
     bs = cfg.batch_size
     n_batches = max(1, (n + bs - 1) // bs)
     pad = n_batches * bs - n
-    xp = np.concatenate([xs, np.zeros((pad, xs.shape[1]), xs.dtype)])
-    yp = np.concatenate([ys, np.full(pad, -1, ys.dtype)])
-    xb = jnp.asarray(xp.reshape(n_batches, bs, -1))
-    yb = jnp.asarray(yp.reshape(n_batches, bs))
+    xp = np.concatenate([xs, np.zeros((pad, *xs.shape[1:]), xs.dtype)])
+    yp = np.concatenate([ys, np.full((pad, *ys.shape[1:]), -1, ys.dtype)])
+    xb = jnp.asarray(xp.reshape(n_batches, bs, *xs.shape[1:]))
+    yb = jnp.asarray(yp.reshape(n_batches, bs, *ys.shape[1:]))
     new = params
     for _ in range(cfg.local_epochs):
-        new = _sgd_epoch(new, xb, yb, cfg.learning_rate)
+        new = _sgd_epoch(new, xb, yb, cfg.learning_rate, model=model)
     return jax.tree_util.tree_map(lambda a, b: a - b, new, params)
 
 
 def _legacy_round(
     params, devs, budgets, agg_w, dataset, shards, cfg: FLConfig, payload,
-    *, need_norms: bool,
+    *, need_norms: bool, model,
 ):
     """The per-device host round body (steps 3-5), kept as the oracle.
 
@@ -132,7 +138,9 @@ def _legacy_round(
     deltas, bits_used, ratios, norms = [], [], [], []
     for j, d in enumerate(devs):
         idx = shards[d]
-        delta = local_update(params, dataset.x_train[idx], dataset.y_train[idx], cfg)
+        delta = local_update(
+            params, dataset.x_train[idx], dataset.y_train[idx], cfg, model
+        )
         if need_norms:
             # the policies' norm signal is the raw local update, taken
             # before quantization (Amiri et al. rank by what the device
@@ -285,10 +293,8 @@ def run_federated_learning(
             eval_every=eval_every, progress=progress,
         )
     key = jax.random.PRNGKey(cfg.seed)
-    params = lenet.schema()
-    from repro.models.params import init_params
-
-    params = init_params(params, key)
+    model = get_fl_model(cfg.model)
+    params = model.init(key)
     payload = tree_count(params) * 32  # I: full-precision payload bits
 
     sizes = np.array([len(s) for s in shards], dtype=np.float64)
@@ -299,7 +305,9 @@ def run_federated_learning(
     # per-device host loop (the oracle — see module docstring).
     engine = None
     if cfg.fl_engine == "batched":
-        engine = fl_engine.BatchedRoundEngine(dataset, shards, cfg, payload)
+        engine = fl_engine.BatchedRoundEngine(
+            dataset, shards, cfg, payload, model=model
+        )
 
     # channel realizations for the whole horizon
     dist = chan.sample_positions(jax.random.fold_in(key, 1), cell)
@@ -342,7 +350,10 @@ def run_federated_learning(
     if engine is None:   # the batched engine evaluates through its EvalBank
         x_test = jnp.asarray(dataset.x_test)
         y_test = jnp.asarray(dataset.y_test)
-        acc_fn = jax.jit(lenet.accuracy)
+        # bound methods are fresh objects per attribute access, so
+        # jax.jit(model.accuracy) here would recompile every run; the
+        # engine's module-level jit (model as a static arg) caches properly
+        acc_fn = functools.partial(fl_engine._eval_full, model=model)
 
     logs = []
     t_wall = 0.0
@@ -373,7 +384,7 @@ def run_federated_learning(
         else:
             params, bits_used, ratios, norms = _legacy_round(
                 params, devs, budgets, agg_w, dataset, shards, cfg, payload,
-                need_norms=need_norms,
+                need_norms=need_norms, model=model,
             )
         # empty rounds (T*K > M schedules legitimately produce empty tail
         # groups) train/aggregate nothing; the wall clock still advances and
@@ -443,10 +454,8 @@ def _horizon_setup(dataset, shards, cell, cfg: FLConfig, uplink, schedule):
     system and the equality grid can demand identical schedules, budgets,
     rates and times.
     """
-    from repro.models.params import init_params
-
     key = jax.random.PRNGKey(cfg.seed)
-    params = init_params(lenet.schema(), key)
+    params = get_fl_model(cfg.model).init(key)
     payload = tree_count(params) * 32
 
     sizes = np.array([len(s) for s in shards], dtype=np.float64)
@@ -513,6 +522,7 @@ def _horizon_statics(cfg: FLConfig, payload: int, eval_full: bool) -> dict:
         payload=int(payload), compress=cfg.compression == "adaptive",
         paper_exact=bool(cfg.paper_exact_range),
         use_pallas=bool(cfg.use_pallas), eval_full=bool(eval_full),
+        model=get_fl_model(cfg.model), topk=float(cfg.topk),
     )
 
 
@@ -553,13 +563,14 @@ def _stack_plans(plans, bank, num_rounds):
 
 def _assemble_horizon_result(
     plan: _HorizonPlan, cfg: FLConfig, uplink, eval_mask, bits_tk, accs_t,
-    final_params, progress=None,
+    final_params, progress=None, kept_tk=None,
 ) -> FLResult:
     """Per-round ``RoundLog`` list from the scan outputs + the host plan.
 
     Slices each round's (K,) scan row down to its true group size, rebuilds
-    the compression ratios with the same helper the per-round engines call,
-    and forward-fills skipped-eval rounds' accuracy — the same logging
+    the compression ratios with the same helper the per-round engines call
+    (honest sparse on-air ratios from ``kept_tk`` when the top-k stage is
+    on), and forward-fills skipped-eval rounds' accuracy — the same logging
     contract :func:`run_federated_learning` produces, entry for entry.
     """
     logs = []
@@ -569,6 +580,11 @@ def _assemble_horizon_result(
         bits_r = np.asarray(bits_tk[t, :k])
         if k == 0:
             ratios = np.zeros(0)
+        elif cfg.compression == "adaptive" and cfg.topk < 1.0:
+            ratios = compression.sparse_compression_ratio(
+                plan.payload, np.asarray(kept_tk[t, :k]), bits_r,
+                plan.payload // 32,
+            )
         elif cfg.compression == "adaptive":
             ratios = np.asarray(
                 qlib.compression_ratio(
@@ -625,7 +641,7 @@ def run_horizon_scanned(
     eidx = (np.zeros((T, 1), np.int32) if eval_full else plan.eval_idx)
     nb = max(bank.n_batches_for(g) for g in plan.schedule.rounds)
 
-    final, bits_tk, accs_t = fl_engine.run_horizon(
+    final, bits_tk, kept_tk, accs_t = fl_engine.run_horizon(
         plan.params0,
         jnp.asarray(plan.dev_tk),
         jnp.asarray(plan.budgets_tk),
@@ -637,7 +653,7 @@ def run_horizon_scanned(
     )
     return _assemble_horizon_result(
         plan, cfg, uplink, eval_mask, np.asarray(bits_tk), np.asarray(accs_t),
-        final, progress,
+        final, progress, kept_tk=np.asarray(kept_tk),
     )
 
 
@@ -678,7 +694,7 @@ def run_horizon_vmapped(
     eval_mask = _eval_mask(T, eval_every)
     params_s, dev, bud, agg, eidx, eval_full, nb = _stack_plans(plans, bank, T)
 
-    final_s, bits_stk, accs_st = fl_engine.run_horizon_vmapped(
+    final_s, bits_stk, kept_stk, accs_st = fl_engine.run_horizon_vmapped(
         params_s,
         jnp.asarray(dev), jnp.asarray(bud), jnp.asarray(agg, jnp.float32),
         jnp.asarray(eval_mask), jnp.asarray(eidx),
@@ -686,12 +702,13 @@ def run_horizon_vmapped(
         nb=int(nb), **_horizon_statics(cfg, plans[0].payload, eval_full),
     )
     bits_np, accs_np = np.asarray(bits_stk), np.asarray(accs_st)
+    kept_np = np.asarray(kept_stk)
     results = []
     for s, plan in enumerate(plans):
         fp = jax.tree_util.tree_map(lambda l, s=s: l[s], final_s)
         results.append(_assemble_horizon_result(
             plan, dataclasses.replace(cfg, seed=seeds[s]), uplink, eval_mask,
-            bits_np[s], accs_np[s], fp,
+            bits_np[s], accs_np[s], fp, kept_tk=kept_np[s],
         ))
     return results
 
@@ -770,7 +787,7 @@ def run_cell_sweep(
             row = []
             for s in range(S):
                 i = c * S + s
-                final, bits_tk, accs_t = fl_engine.run_horizon(
+                final, bits_tk, kept_tk, accs_t = fl_engine.run_horizon(
                     flat[i].params0,
                     jnp.asarray(dev[i]), jnp.asarray(bud[i]),
                     jnp.asarray(agg[i], jnp.float32),
@@ -781,7 +798,7 @@ def run_cell_sweep(
                 row.append(_assemble_horizon_result(
                     flat[i], dataclasses.replace(cfg, seed=inst_seeds[c][s]),
                     uplink, eval_mask, np.asarray(bits_tk),
-                    np.asarray(accs_t), final,
+                    np.asarray(accs_t), final, kept_tk=np.asarray(kept_tk),
                 ))
             results.append(row)
         return results
@@ -806,7 +823,7 @@ def run_cell_sweep(
             lambda l: jnp.concatenate([l, l[:pad]]), params_cs
         )
 
-    final_cs, bits_cstk, accs_cst = fl_engine.run_horizon_sharded(
+    final_cs, bits_cstk, kept_cstk, accs_cst = fl_engine.run_horizon_sharded(
         params_cs,
         jnp.asarray(dev), jnp.asarray(bud), jnp.asarray(agg, jnp.float32),
         jnp.asarray(eval_mask), jnp.asarray(eidx),
@@ -814,6 +831,7 @@ def run_cell_sweep(
         shards=shards_n, nb=int(nb), **statics,
     )
     bits_np = np.asarray(bits_cstk)[:C]
+    kept_np = np.asarray(kept_cstk)[:C]
     accs_np = np.asarray(accs_cst)[:C]
     results = []
     for c in range(C):
@@ -826,6 +844,7 @@ def run_cell_sweep(
                 plans[c][s],
                 dataclasses.replace(cfg, seed=inst_seeds[c][s]), uplink,
                 eval_mask, bits_np[c, s], accs_np[c, s], fp,
+                kept_tk=kept_np[c, s],
             ))
         results.append(row)
     return results

@@ -45,10 +45,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compression as comp
 from repro.core import quantization as qlib
-from repro.data.client_bank import ClientBank, EvalBank, eval_sample_plan
+from repro.data.client_bank import (
+    BucketedClientBank, ClientBank, EvalBank, eval_sample_plan,
+)
 from repro.kernels.aggregate import weighted_aggregate_pallas
-from repro.models import lenet
 
 ENGINES = ("legacy", "batched")
 # run_federated_learning round-body implementations; FLConfig validates
@@ -69,14 +71,19 @@ HORIZON_MODES = ("per-round", "scan")
 # Shared local-SGD epoch (the single source of the per-client math)
 # --------------------------------------------------------------------------
 
-def sgd_epoch(params, x, y, lr, *, unroll: int = 1):
+def sgd_epoch(params, x, y, lr, *, model, unroll: int = 1):
     """One pass of minibatch SGD over a device's (padded) shard.
 
-    x: (n_batches, bs, D); y: (n_batches, bs) with -1 marking padding.
-    Both engines run exactly this function — the legacy loop jits it per
-    device (``fl._sgd_epoch``), the batched engine vmaps it over the client
-    axis — so an all-padding batch contributes an exactly-zero gradient and
-    the two paths apply the same update sequence.  ``unroll`` feeds
+    x: (n_batches, bs, ...); y: (n_batches, bs, ...) with -1 marking
+    padding in the label positions.  ``model`` is an
+    :mod:`repro.models.fl_models` FLModel (hashable, rides as a jit
+    static): its ``batch_loss(params, bx, by, valid)`` owns the per-batch
+    loss, with ``valid = (by >= 0)`` as f32 precomputed here so image
+    models mask exactly as the historical inlined LeNet loss did.  Both
+    engines run exactly this function — the legacy loop jits it per device
+    (``fl._sgd_epoch``), the batched engine vmaps it over the client axis —
+    so an all-padding batch contributes an exactly-zero gradient and the
+    two paths apply the same update sequence.  ``unroll`` feeds
     ``lax.scan`` (numerics-neutral); the batched engine unrolls a few steps
     to cut the per-step loop overhead its one-dispatch round pays K-fold.
     """
@@ -85,11 +92,7 @@ def sgd_epoch(params, x, y, lr, *, unroll: int = 1):
         bx, by, valid = batch
 
         def masked_loss(p_):
-            logits = lenet.forward(p_, bx)
-            logz = jax.nn.logsumexp(logits, axis=-1)
-            gold = jnp.take_along_axis(logits, by[:, None], axis=-1)[:, 0]
-            per = (logz - gold) * valid
-            return jnp.sum(per) / jnp.maximum(jnp.sum(valid), 1.0)
+            return model.batch_loss(p_, bx, by, valid)
 
         g = jax.grad(masked_loss)(p)
         new = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
@@ -138,29 +141,78 @@ def _pallas_aggregate_leaf(leaf, bits_k, agg_w, *, compress, paper_exact):
     return out.reshape(leaf.shape[1:])
 
 
+def _sparse_quantize_aggregate(
+    deltas, budgets, agg_w, *, payload, topk, paper_exact, use_pallas,
+):
+    """Top-k sparsification ∘ DoReFa over the concatenated update vector.
+
+    Flattens the delta tree to one (K, P) matrix (sparsification picks
+    coordinates of the *whole* payload, not per leaf), derives traced
+    per-client (kept, bits) from the §IV budgets
+    (:func:`repro.core.compression.topk_plan`), masks everything but each
+    row's top-``kept`` magnitudes, DoReFa-quantizes the survivors, and
+    reduces through the einsum or the (chunked) Pallas kernel.  The row
+    max-abs scale is unchanged by masking (the largest-magnitude
+    coordinate is always kept), so the codes match a quantize-of-masked
+    oracle exactly.  Returns ``(update_tree, kept, bits)``.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    k = leaves[0].shape[0]
+    sizes = [int(np.prod(leaf.shape[1:])) for leaf in leaves]
+    flat = jnp.concatenate(
+        [leaf.reshape(k, -1).astype(jnp.float32) for leaf in leaves], axis=1
+    )                                            # (K, P)
+    num_params = payload // 32
+    kept, bits = comp.topk_plan(num_params, budgets, topk=topk)
+    masked = flat * comp.topk_mask(flat, kept)
+
+    scales_in = jnp.ones((k,), jnp.float32) if paper_exact else None
+    codes, scales, a = qlib.quantize_codes_batched(masked, bits, scales=scales_in)
+    full = (bits >= 32).astype(jnp.float32)
+    if use_pallas:
+        out = weighted_aggregate_pallas(
+            codes, scales, agg_w * (1.0 - full), levels=a
+        )
+        out = out + jnp.einsum("k,kn->n", agg_w * full, masked)
+    else:
+        out = jnp.einsum("k,kn->n", agg_w * full, masked) + jnp.einsum(
+            "k,kn->n", agg_w * (1.0 - full) / a * scales, codes
+        )
+    parts = jnp.split(out, np.cumsum(sizes)[:-1])
+    update = jax.tree_util.tree_unflatten(
+        treedef,
+        [p.reshape(leaf.shape[1:]) for p, leaf in zip(parts, leaves)],
+    )
+    return update, kept, bits
+
+
 def _train_quantize_aggregate(
     params, x, y, budgets, agg_w,
     *, lr, epochs, payload, compress, paper_exact, use_pallas, need_norms,
+    model, topk,
 ):
     """The round body on gathered client rows: vmapped local SGD -> norms ->
     traced per-client quantization -> weighted aggregation.
 
-    x: (K, nb, BS, D); y: (K, nb, BS).  The single implementation behind
-    both the per-round jit (:func:`_round_step` gathers then calls this)
-    and the scanned horizon (:func:`_horizon_core` calls it inside the
-    ``lax.scan`` body) — the two drivers apply the identical update math,
-    which is what the scan-vs-per-round equality grid pins.  Returns
-    (new_params, bits (K,) int32, norms (K,) f32; zeros unless
-    ``need_norms``).  Zero-weight rows (``agg_w[k] = 0``: schedule padding
-    in the scan path) still train but contribute exactly zero to the
-    aggregate, so padded tail/empty rounds leave the parameters untouched.
+    x: (K, nb, BS, ...); y: (K, nb, BS, ...).  The single implementation
+    behind both the per-round jit (:func:`_round_step` gathers then calls
+    this) and the scanned horizon (:func:`_horizon_core` calls it inside
+    the ``lax.scan`` body) — the two drivers apply the identical update
+    math, which is what the scan-vs-per-round equality grid pins.
+    ``model`` (static FLModel) owns the per-batch loss; ``topk`` < 1
+    routes compression through the top-k ∘ DoReFa stage.  Returns
+    (new_params, bits (K,) int32, kept (K,) int32 — zeros when the sparse
+    stage is off — and norms (K,) f32; zeros unless ``need_norms``).
+    Zero-weight rows (``agg_w[k] = 0``: schedule padding in the scan path)
+    still train but contribute exactly zero to the aggregate, so padded
+    tail/empty rounds leave the parameters untouched.
     """
     k = x.shape[0]
 
     def local_delta(xk, yk):
         new = params
         for _ in range(epochs):
-            new = sgd_epoch(new, xk, yk, lr, unroll=8)
+            new = sgd_epoch(new, xk, yk, lr, model=model, unroll=8)
         return jax.tree_util.tree_map(lambda a, b: a - b, new, params)
 
     deltas = jax.vmap(local_delta)(x, y)        # leaves (K, ...)
@@ -175,6 +227,18 @@ def _train_quantize_aggregate(
         norms = jnp.sqrt(sq)
     else:
         norms = jnp.zeros((k,), jnp.float32)
+
+    kept = jnp.zeros((k,), jnp.int32)
+
+    if compress and topk < 1.0:
+        update, kept, bits = _sparse_quantize_aggregate(
+            deltas, budgets, agg_w, payload=payload, topk=topk,
+            paper_exact=paper_exact, use_pallas=use_pallas,
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: p + u, params, update
+        )
+        return new_params, bits, kept, norms
 
     if compress:
         bits = qlib.adaptive_bits(payload, budgets)     # (K,) int32, traced
@@ -221,19 +285,20 @@ def _train_quantize_aggregate(
             lambda leaf: jnp.einsum("k,k...->...", agg_w, leaf), deltas
         )
     new_params = jax.tree_util.tree_map(lambda p, u: p + u, params, update)
-    return new_params, bits, norms
+    return new_params, bits, kept, norms
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "nb", "lr", "epochs", "payload", "compress", "paper_exact",
-        "use_pallas", "need_norms",
-    ),
+_ROUND_STATICS = (
+    "lr", "epochs", "payload", "compress", "paper_exact",
+    "use_pallas", "need_norms", "model", "topk",
 )
+
+
+@functools.partial(jax.jit, static_argnames=("nb",) + _ROUND_STATICS)
 def _round_step(
     params, xb, yb, dev_idx, budgets, agg_w,
     *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, need_norms,
+    model, topk,
 ):
     """gather -> shared round body (:func:`_train_quantize_aggregate`).
 
@@ -243,12 +308,29 @@ def _round_step(
     count are still all-padding and contribute exactly-zero gradients.
     Retraces once per distinct (group size K, nb) pair.
     """
-    x = xb[dev_idx, :nb]                 # (K, nb, BS, D)
-    y = yb[dev_idx, :nb]                 # (K, nb, BS)
+    x = xb[dev_idx, :nb]                 # (K, nb, BS, ...)
+    y = yb[dev_idx, :nb]                 # (K, nb, BS, ...)
     return _train_quantize_aggregate(
         params, x, y, budgets, agg_w, lr=lr, epochs=epochs, payload=payload,
         compress=compress, paper_exact=paper_exact, use_pallas=use_pallas,
-        need_norms=need_norms,
+        need_norms=need_norms, model=model, topk=topk,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=_ROUND_STATICS)
+def _round_step_gathered(
+    params, x, y, budgets, agg_w,
+    *, lr, epochs, payload, compress, paper_exact, use_pallas, need_norms,
+    model, topk,
+):
+    """Round body on pre-gathered (K, nb, ...) rows — the bucketed-bank
+    path, where the K-row gather spans several per-bucket banks and runs
+    outside this jit (:meth:`BucketedClientBank.gather`).  Same body, so
+    bucketed rounds are bit-identical to the padded bank's."""
+    return _train_quantize_aggregate(
+        params, x, y, budgets, agg_w, lr=lr, epochs=epochs, payload=payload,
+        compress=compress, paper_exact=paper_exact, use_pallas=use_pallas,
+        need_norms=need_norms, model=model, topk=topk,
     )
 
 
@@ -258,7 +340,7 @@ def _round_step(
 
 _HORIZON_STATICS = (
     "nb", "lr", "epochs", "payload", "compress", "paper_exact", "use_pallas",
-    "eval_full",
+    "eval_full", "model", "topk",
 )
 
 
@@ -266,6 +348,7 @@ def _horizon_core(
     params, dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn, xb, yb,
     xe, ye,
     *, lr, epochs, payload, compress, paper_exact, use_pallas, eval_full,
+    model, topk,
 ):
     """One whole horizon as a single ``lax.scan`` over rounds.
 
@@ -276,7 +359,8 @@ def _horizon_core(
     FedAvg weights (zero on padding, which multiplies the padded rows out
     of the aggregate exactly), eval_mask_t (T,) bool, and eval_idx_tn
     (T, n) eval-row gather plans (ignored when ``eval_full``).  Emits the
-    per-round (T, K) bit-widths and (T,) sampled test accuracies (NaN on
+    per-round (T, K) bit-widths, (T, K) kept-coordinate counts (zeros
+    unless the top-k stage is on) and (T,) sampled test accuracies (NaN on
     rounds ``eval_mask_t`` skips — the host forward-fills, mirroring the
     per-round driver's repeated-accuracy logging under ``eval_every``).
 
@@ -288,29 +372,29 @@ def _horizon_core(
 
     def body(p, inp):
         dev, bud, w, do_eval, eidx = inp
-        x = xb[dev]                     # (K, nb, BS, D)
-        y = yb[dev]                     # (K, nb, BS)
-        p2, bits, _ = _train_quantize_aggregate(
+        x = xb[dev]                     # (K, nb, BS, ...)
+        y = yb[dev]                     # (K, nb, BS, ...)
+        p2, bits, kept, _ = _train_quantize_aggregate(
             p, x, y, bud, w, lr=lr, epochs=epochs, payload=payload,
             compress=compress, paper_exact=paper_exact,
-            use_pallas=use_pallas, need_norms=False,
+            use_pallas=use_pallas, need_norms=False, model=model, topk=topk,
         )
 
         def ev(q):
             if eval_full:
-                return lenet.accuracy(q, xe, ye)
-            return lenet.accuracy(q, xe[eidx], ye[eidx])
+                return model.accuracy(q, xe, ye)
+            return model.accuracy(q, xe[eidx], ye[eidx])
 
         acc = jax.lax.cond(
             do_eval, ev, lambda q: jnp.asarray(jnp.nan, jnp.float32), p2
         )
-        return p2, (bits, acc)
+        return p2, (bits, kept, acc)
 
-    final, (bits_t, acc_t) = jax.lax.scan(
+    final, (bits_t, kept_t, acc_t) = jax.lax.scan(
         body, params,
         (dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn),
     )
-    return final, bits_t, acc_t
+    return final, bits_t, kept_t, acc_t
 
 
 @functools.partial(jax.jit, static_argnames=_HORIZON_STATICS)
@@ -318,6 +402,7 @@ def run_horizon(
     params, dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn, xb, yb,
     xe, ye,
     *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, eval_full,
+    model, topk,
 ):
     """One precomputed-schedule horizon, one dispatch (see _horizon_core).
 
@@ -332,6 +417,7 @@ def run_horizon(
         xb[:, :nb], yb[:, :nb], xe, ye,
         lr=lr, epochs=epochs, payload=payload, compress=compress,
         paper_exact=paper_exact, use_pallas=use_pallas, eval_full=eval_full,
+        model=model, topk=topk,
     )
 
 
@@ -340,6 +426,7 @@ def run_horizon_vmapped(
     params_s, dev_stk, budgets_stk, agg_stk, eval_mask_t, eval_idx_stn,
     xb, yb, xe, ye,
     *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, eval_full,
+    model, topk,
 ):
     """A whole seed sweep (S independent horizons), one dispatch.
 
@@ -356,7 +443,7 @@ def run_horizon_vmapped(
             p, d, b, a, eval_mask_t, ei, xbs, ybs, xe, ye,
             lr=lr, epochs=epochs, payload=payload, compress=compress,
             paper_exact=paper_exact, use_pallas=use_pallas,
-            eval_full=eval_full,
+            eval_full=eval_full, model=model, topk=topk,
         )
 
     return jax.vmap(one)(params_s, dev_stk, budgets_stk, agg_stk, eval_idx_stn)
@@ -365,7 +452,7 @@ def run_horizon_vmapped(
 @functools.lru_cache(maxsize=None)
 def _sharded_horizon_fn(
     shards, nb, lr, epochs, payload, compress, paper_exact, use_pallas,
-    eval_full,
+    eval_full, model, topk,
 ):
     """Build (and cache) the jitted shard_map'd cell sweep for a mesh of
     ``shards`` local devices (the scheduler's vertex-reduction pattern,
@@ -390,7 +477,7 @@ def _sharded_horizon_fn(
                 p, d, b, a, emask, ei, xbs, ybs, xe, ye,
                 lr=lr, epochs=epochs, payload=payload, compress=compress,
                 paper_exact=paper_exact, use_pallas=use_pallas,
-                eval_full=eval_full,
+                eval_full=eval_full, model=model, topk=topk,
             )
 
         def per_cell(p, d, b, a, ei):
@@ -410,7 +497,7 @@ def run_horizon_sharded(
     params_cs, dev_cstk, budgets_cstk, agg_cstk, eval_mask_t, eval_idx_cstn,
     xb, yb, xe, ye,
     *, shards, nb, lr, epochs, payload, compress, paper_exact, use_pallas,
-    eval_full,
+    eval_full, model, topk,
 ):
     """A (C, S) cells-x-seeds sweep with the cell axis sharded over a mesh.
 
@@ -422,6 +509,7 @@ def run_horizon_sharded(
     fn = _sharded_horizon_fn(
         int(shards), int(nb), float(lr), int(epochs), int(payload),
         bool(compress), bool(paper_exact), bool(use_pallas), bool(eval_full),
+        model, float(topk),
     )
     return fn(
         params_cs, dev_cstk, budgets_cstk, agg_cstk, eval_mask_t,
@@ -433,28 +521,36 @@ def run_horizon_sharded(
 # Engine front-end (what the fl driver calls)
 # --------------------------------------------------------------------------
 
-_eval_full = jax.jit(lenet.accuracy)
+@functools.partial(jax.jit, static_argnames=("model",))
+def _eval_full(params, xe, ye, *, model):
+    return model.accuracy(params, xe, ye)
 
 
-@jax.jit
-def _eval_sampled(params, xe, ye, idx):
+@functools.partial(jax.jit, static_argnames=("model",))
+def _eval_sampled(params, xe, ye, idx, *, model):
     """Client-sampled test accuracy: gather the round's eval rows, forward
     once — the ClientBank gather idiom applied to evaluation."""
-    return lenet.accuracy(params, xe[idx], ye[idx])
+    return model.accuracy(params, xe[idx], ye[idx])
 
 
 class BatchedRoundEngine:
     """Round-body engine: builds the bank once, then one dispatch per round."""
 
-    def __init__(self, dataset, shards, cfg, payload_bits: int):
+    def __init__(self, dataset, shards, cfg, payload_bits: int, model=None):
+        from repro.models.fl_models import get_fl_model
+
         self.cfg = cfg
         self.payload = int(payload_bits)
-        self.bank = ClientBank.build(
+        self.model = model if model is not None else get_fl_model(cfg.model)
+        bank_cls = (
+            BucketedClientBank if cfg.client_bank == "bucketed" else ClientBank
+        )
+        self.bank = bank_cls.build(
             dataset.x_train, dataset.y_train, shards, cfg.batch_size
         )
         # Evaluation through the same gather idiom: test set resident on
         # device, per-round sampled rows precomputed (None = full eval,
-        # bit-identical to lenet.accuracy over the raw test arrays).
+        # bit-identical to the legacy accuracy over the raw test arrays).
         self.eval_bank = EvalBank.build(dataset.x_test, dataset.y_test)
         self._eval_idx = eval_sample_plan(
             self.eval_bank.num_samples, cfg.eval_sample, cfg.num_rounds,
@@ -465,16 +561,19 @@ class BatchedRoundEngine:
         """Test accuracy after round t (sampled per ``FLConfig.eval_sample``).
 
         At ``eval_sample = 1`` this is the full-test-set accuracy, equal
-        bit for bit to the legacy driver's ``lenet.accuracy`` call; below 1
+        bit for bit to the legacy driver's ``model.accuracy`` call; below 1
         it evaluates the round's precomputed sample of test rows — the same
         (T, n) plan the scanned horizon consumes, so the two drivers report
         identical sampled accuracies.
         """
         if self._eval_idx is None:
-            return float(_eval_full(params, self.eval_bank.xe, self.eval_bank.ye))
+            return float(_eval_full(
+                params, self.eval_bank.xe, self.eval_bank.ye,
+                model=self.model,
+            ))
         return float(_eval_sampled(
             params, self.eval_bank.xe, self.eval_bank.ye,
-            jnp.asarray(self._eval_idx[t]),
+            jnp.asarray(self._eval_idx[t]), model=self.model,
         ))
 
     def run_round(self, params, devs, budgets, agg_w, *, need_norms: bool):
@@ -486,7 +585,10 @@ class BatchedRoundEngine:
 
         Returns ``(params, bits, ratios, norms)`` with bits/ratios as
         np arrays matching the legacy per-round log entries and norms a
-        list of floats (empty unless ``need_norms``).
+        list of floats (empty unless ``need_norms``).  With the top-k
+        stage on, ``bits`` are the per-client DoReFa widths of the kept
+        coordinates and ``ratios`` the honest sparse on-air ratios
+        I / S_k (``compression.sparse_compression_ratio``).
         """
         k = len(devs)
         if k == 0:    # empty T*K > M tail round: nothing to train or send
@@ -495,17 +597,34 @@ class BatchedRoundEngine:
         compress = cfg.compression == "adaptive"
         # slice the scan to this group's own max batch count (see _round_step)
         nb = self.bank.n_batches_for(devs)
-        params, bits, norms = _round_step(
-            params, self.bank.xb, self.bank.yb,
-            jnp.asarray(devs, jnp.int32),
-            jnp.asarray(np.asarray(budgets, np.float64)),
-            jnp.asarray(np.asarray(agg_w, np.float64), jnp.float32),
-            nb=nb, lr=float(cfg.learning_rate), epochs=int(cfg.local_epochs),
+        statics = dict(
+            lr=float(cfg.learning_rate), epochs=int(cfg.local_epochs),
             payload=self.payload, compress=compress,
             paper_exact=bool(cfg.paper_exact_range),
             use_pallas=bool(cfg.use_pallas), need_norms=bool(need_norms),
+            model=self.model, topk=float(cfg.topk),
         )
-        if compress:
+        budgets_dev = jnp.asarray(np.asarray(budgets, np.float64))
+        agg_dev = jnp.asarray(np.asarray(agg_w, np.float64), jnp.float32)
+        if isinstance(self.bank, BucketedClientBank):
+            x, y = self.bank.gather(devs, nb)
+            params, bits, kept, norms = _round_step_gathered(
+                params, x, y, budgets_dev, agg_dev, **statics
+            )
+        else:
+            params, bits, kept, norms = _round_step(
+                params, self.bank.xb, self.bank.yb,
+                jnp.asarray(devs, jnp.int32), budgets_dev, agg_dev,
+                nb=nb, **statics,
+            )
+        if compress and cfg.topk < 1.0:
+            # honest sparse accounting: on-air size from the realized
+            # (kept, bits) pair, not the dense 32-bit payload
+            ratios = comp.sparse_compression_ratio(
+                self.payload, np.asarray(kept), np.asarray(bits),
+                self.payload // 32,
+            )
+        elif compress:
             # one vectorized call to the same helper the legacy loop runs
             # per device — identical f32 IEEE ops, so the recorded ratios
             # match the oracle's bit for bit

