@@ -9,10 +9,12 @@ Paper claim: scheme 1 dominates throughout; schemes 1-3 exceed ~60% at T=35;
 scheme 4 is the weakest. We validate the ORDERING (1 best, 4 worst) on the
 synthetic set.
 
-Beyond the paper's four, the sweep carries the ref [6] baselines and the two
+Beyond the paper's four, the sweep carries the ref [6] baselines and the
 online FL-state-aware policies (update-aware: Amiri et al. arXiv:2001.10402;
-age-fair: Yang et al. arXiv:1908.06287), which run live inside the training
-loop — every curve goes through the same policy registry."""
+age-fair: Yang et al. arXiv:1908.06287; matching-pursuit: the OTA companion
+policy of repro.core.ota, which at ota_noise=0 greedily admits by weighted
+update energy), all running live inside the training loop — every curve
+goes through the same policy registry."""
 from __future__ import annotations
 
 import time
@@ -34,6 +36,7 @@ SCHEMES = [
     # online FL-state-aware policies (live select_round inside the FL loop)
     ("update_aware+max_power", "update-aware", "max"),
     ("age_fair+max_power", "age-fair", "max"),
+    ("matching_pursuit+max_power", "matching-pursuit", "max"),
 ]
 
 

@@ -41,6 +41,7 @@ SUITES = [
     ("fl_engine", "benchmarks.fl_bench"),          # legacy vs batched round loop
     ("fl_cells", "benchmarks.fl_bench:cells_main"),  # scanned cells x seeds sweep
     ("payload", "benchmarks.payload_bench"),       # LLM-scale aggregation
+    ("ota", "benchmarks.ota_bench"),               # analog vs digital uplink
     ("fig5", "benchmarks.fig5_noma_vs_tdma"),      # Fig. 5
     ("fig6", "benchmarks.fig6_schemes"),           # Fig. 6
     ("roofline", "benchmarks.roofline_bench"),     # EXPERIMENTS §Roofline
@@ -60,6 +61,7 @@ PERSIST = {
     "fl_engine": "BENCH_fl",
     "fl_cells": "BENCH_cells",
     "payload": "BENCH_payload",
+    "ota": "BENCH_ota",
 }
 
 # --check-regression: per-suite wall-time metrics (everything else in a
@@ -72,6 +74,7 @@ REGRESSION_METRICS = {
     "fl_cells": ("scan_sweep_s", "per_round_legacy_sweep_s",
                  "per_round_batched_sweep_s"),
     "payload": ("einsum_s", "pallas_chunked_s"),
+    "ota": ("horizon_s",),
 }
 REGRESSION_THRESHOLD = 1.20
 

@@ -3,7 +3,8 @@ K=3 per round, T=35 rounds, LeNet-300-100, non-iid data — reproducing the
 Fig. 5 / Fig. 6 settings.
 
     PYTHONPATH=src python examples/fl_noma_mnist.py [--fast] \
-        [--scheduler NAME] [--power mapel|max] [--uplink noma|tdma] \
+        [--scheduler NAME] [--power mapel|max|ota-align] \
+        [--uplink noma|tdma|ota] [--ota-noise STD] [--ota-threshold FRAC] \
         [--engine batched|legacy] [--pallas-agg] \
         [--horizon per-round|scan] [--seeds N] \
         [--model NAME] [--topk FRAC]
@@ -11,9 +12,25 @@ Fig. 5 / Fig. 6 settings.
 ``--scheduler`` accepts any registered policy name (see
 ``repro.core.scheduling``): the paper's precomputed schedulers
 (lazy-gwmin, literal-gwmin, random, round-robin, proportional-fair) and
-the online FL-state-aware policies (update-aware, age-fair), which are
-selected round by round inside the training loop from the previous
-rounds' update norms / ages.
+the online FL-state-aware policies (update-aware, age-fair,
+matching-pursuit), which are selected round by round inside the training
+loop from the previous rounds' update norms / ages.
+
+``--uplink ota`` switches the round aggregate from digital
+decode-and-average to the analog over-the-air superposition
+(``repro.core.ota``): scheduled devices transmit simultaneously with
+truncated-channel-inversion scaling and the PS receives one noisy sum —
+DoReFa quantization and top-k never apply, so the driver forces
+``compression="none"``.  ``--ota-noise`` sets the receiver noise std
+(0 = the exact weighted aggregate) and ``--ota-threshold`` the
+inversion truncation (devices below that fraction of the round's best
+channel sit out).  ``--power ota-align`` reports the matching
+channel-inversion control-plane powers; ``--scheduler
+matching-pursuit`` is the OTA-aware online policy (greedy residual
+aggregation-error decrease).  Example:
+
+    PYTHONPATH=src python examples/fl_noma_mnist.py --fast \
+        --uplink ota --ota-noise 1e-9 --scheduler matching-pursuit
 
 ``--engine`` picks the round-body engine (``FLConfig.fl_engine``):
 ``batched`` (default here) runs each round as one jitted dispatch over a
@@ -66,7 +83,7 @@ import argparse
 import numpy as np
 
 from repro.config import FLConfig
-from repro.core import channel, fl, scheduling
+from repro.core import channel, fl, ota, scheduling
 from repro.data import dirichlet_partition, make_mnist_like
 from repro.data.tokens import make_token_dataset
 from repro.models.fl_models import get_fl_model
@@ -77,8 +94,17 @@ def main():
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--scheduler", default="lazy-gwmin",
                     choices=scheduling.available_policies())
-    ap.add_argument("--power", default="mapel")
-    ap.add_argument("--uplink", default="noma")
+    ap.add_argument("--power", default=None,
+                    help="power mode (default mapel; ota uplink defaults "
+                         "to max — MAPEL optimizes SIC decode rates the "
+                         "analog sum never performs)")
+    ap.add_argument("--uplink", default="noma", choices=ota.UPLINK_MODES)
+    ap.add_argument("--ota-noise", type=float, default=0.0,
+                    help="OTA receiver noise std (uplink=ota; 0 = exact "
+                         "weighted aggregate)")
+    ap.add_argument("--ota-threshold", type=float, default=0.0,
+                    help="truncated channel inversion: devices below this "
+                         "fraction of the round's best gain sit out")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--engine", default="batched", choices=["legacy", "batched"])
     ap.add_argument("--pallas-agg", action="store_true",
@@ -102,6 +128,8 @@ def main():
     args = ap.parse_args()
     if args.seeds is not None:
         args.horizon = "scan"
+    if args.power is None:
+        args.power = "max" if args.uplink == "ota" else "mapel"
 
     m = 60 if args.fast else 300              # paper: M = 300
     t = args.rounds or (10 if args.fast else 35)  # paper: T = 35
@@ -121,12 +149,17 @@ def main():
         part_labels = ds.y_train
     cell = channel.CellConfig(num_devices=m)   # paper §IV cell parameters
     shards = dirichlet_partition(part_labels, m, seed=args.seed)
+    # the analog sum never decodes per-device payloads: DoReFa / top-k
+    # cannot apply under OTA (FLConfig rejects the combo with the reason)
+    compression = "none" if args.uplink == "ota" else "adaptive"
+    topk = 1.0 if args.uplink == "ota" else args.topk
     cfg = FLConfig(num_devices=m, group_size=3, num_rounds=t,
                    learning_rate=0.01, batch_size=10,   # Table I
                    scheduler=args.scheduler, power_mode=args.power,
-                   compression="adaptive", fl_engine=args.engine,
+                   compression=compression, fl_engine=args.engine,
                    use_pallas=args.pallas_agg, horizon=args.horizon,
-                   model=args.model, topk=args.topk,
+                   model=args.model, topk=topk, uplink=args.uplink,
+                   ota_noise=args.ota_noise, ota_threshold=args.ota_threshold,
                    seed=args.seed)
 
     online = scheduling.get_policy(args.scheduler).online

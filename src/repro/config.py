@@ -164,10 +164,11 @@ class FLConfig:
     local_epochs: int = 1
     scheduler: str = "lazy-gwmin"    # any registered policy name: lazy-gwmin |
                                      # literal-gwmin | random | round-robin |
-                                     # proportional-fair | update-aware | age-fair
+                                     # proportional-fair | update-aware |
+                                     # age-fair | matching-pursuit
     scheduler_backend: str = "numpy"  # numpy | jax (fused while_loop, M >> 300)
                                       # | jax-stepwise (per-step device argmax)
-    power_mode: str = "mapel"        # mapel | max
+    power_mode: str = "mapel"        # mapel | max | ota-align (uplink="ota")
     compression: str = "adaptive"    # adaptive | none
     paper_exact_range: bool = False  # DoReFa fixed [-1,1] range (Eq. 7)
     fl_engine: str = "legacy"        # legacy (per-device host loop, the
@@ -205,6 +206,21 @@ class FLConfig:
                                      # counts — skewed Dirichlet shards stop
                                      # padding to the global max; batched
                                      # per-round engine only)
+    uplink: str = "noma"             # noma | tdma (digital §IV uplinks) |
+                                     # ota (analog over-the-air superposition,
+                                     # core/ota.py: the PS receives the noisy
+                                     # sum and never decodes per-device
+                                     # payloads). Drivers take this as their
+                                     # default; an explicit uplink= call
+                                     # argument still overrides it.
+    ota_noise: float = 0.0           # OTA receiver noise std sigma_ota (same
+                                     # units as the update entries after the
+                                     # channel inversion referral); 0 = the
+                                     # exact weighted aggregate
+    ota_threshold: float = 0.0       # truncated channel inversion: device k
+                                     # participates iff h_k >= threshold *
+                                     # max_j h_j; 0 = everyone scheduled
+                                     # transmits, 1-eps = only the best
     seed: int = 0
 
     def __post_init__(self):
@@ -309,4 +325,21 @@ class FLConfig:
                 "client_bank='bucketed' requires fl_engine='batched' with "
                 "horizon='per-round': the scan horizon indexes one dense "
                 "(M, NB, ...) bank inside the traced program"
+            )
+        from repro.core import ota as ota_lib
+
+        # Incoherent-uplink combos fail here, mirroring the scan+online
+        # guard above; the same check reruns in the fl.py drivers because
+        # uplink can also arrive as a call-site override.
+        ota_lib.check_uplink(
+            self.uplink, compression=self.compression, topk=self.topk,
+            power_mode=self.power_mode,
+        )
+        if self.ota_noise < 0.0:
+            raise ValueError(
+                f"ota_noise must be >= 0, got {self.ota_noise}"
+            )
+        if not 0.0 <= self.ota_threshold < 1.0:
+            raise ValueError(
+                f"ota_threshold must be in [0, 1), got {self.ota_threshold}"
             )

@@ -63,6 +63,7 @@ import numpy as np
 from repro.config import FLConfig
 from repro.core import channel as chan
 from repro.core import compression, fl_engine, noma, scheduling
+from repro.core import ota as ota_lib
 from repro.core import power as power_lib
 from repro.core import quantization as qlib
 from repro.data.client_bank import ClientBank, EvalBank, eval_sample_plan
@@ -127,13 +128,18 @@ def local_update(params, xs, ys, cfg: FLConfig, model):
 
 def _legacy_round(
     params, devs, budgets, agg_w, dataset, shards, cfg: FLConfig, payload,
-    *, need_norms: bool, model,
+    *, need_norms: bool, model, ota=None,
 ):
     """The per-device host round body (steps 3-5), kept as the oracle.
 
     One ``local_update`` + quantize pass per scheduled device, host
     ``tree_map`` aggregation.  Returns ``(params, bits_used, ratios,
-    norms)`` — the same contract as ``BatchedRoundEngine.run_round``.
+    norms)`` — the same contract as ``BatchedRoundEngine.run_round``,
+    including its ``ota`` dict (gains/key/pmax): under the OTA uplink the
+    per-device deltas go over the air unquantized and the host stacks them
+    into the SAME shared aggregation operator the batched engine calls
+    (:func:`repro.core.ota.superpose_tree`), so the three drivers apply
+    bit-identical OTA aggregation math to a given delta stack.
     """
     deltas, bits_used, ratios, norms = [], [], [], []
     for j, d in enumerate(devs):
@@ -164,7 +170,24 @@ def _legacy_round(
             ratios.append(1.0)
         deltas.append(delta)
 
-    if deltas:
+    if deltas and ota is not None:
+        # over-the-air: stack the host-loop deltas client-major and let the
+        # shared superposition operator aggregate (FLConfig already forced
+        # compression='none', so the deltas above are raw)
+        stacked = jax.tree_util.tree_map(
+            lambda *ds: jnp.stack([jnp.asarray(d) for d in ds]), *deltas
+        )
+        update = ota_lib.superpose_tree(
+            stacked,
+            jnp.asarray(np.asarray(ota["gains"]), jnp.float32),
+            jnp.asarray(np.asarray(agg_w), jnp.float32),
+            jnp.asarray(ota["key"]),
+            pmax=float(ota["pmax"]), noise_std=float(cfg.ota_noise),
+            threshold=float(cfg.ota_threshold),
+            use_pallas=bool(cfg.use_pallas),
+        )
+        params = jax.tree_util.tree_map(lambda p, u: p + u, params, update)
+    elif deltas:
         update = jax.tree_util.tree_map(
             lambda *ds: sum(w * d for w, d in zip(agg_w, ds)), *deltas
         )
@@ -186,6 +209,7 @@ def policy_config(cell: chan.CellConfig, cfg: FLConfig) -> scheduling.PolicyConf
         pmax=cell.max_power_w,
         noise_power=cell.noise_power_w,
         backend=cfg.scheduler_backend,
+        ota_noise=cfg.ota_noise,
         seed=cfg.seed,
     )
 
@@ -235,11 +259,17 @@ def _round_physics(devs, powers_t, rates, t, gains, cell, uplink, dl_time):
         # (that skewed the Fig. 5 time axis against TDMA tails)
         round_time = len(devs) * cell.slot_seconds + dl_time
     else:
+        # noma and ota share this branch: both spend ONE shared uplink slot
+        # per non-empty round (the analog superposition *is* a simultaneous
+        # transmission — that shared-slot airtime is OTA's whole appeal).
+        # The SIC rates/budgets are still logged for OTA runs as the
+        # digital-equivalent capacity of the same slot (nothing downstream
+        # quantizes to them: compression='none' is enforced).
         rates = np.asarray(rates)
         budgets = rates * cell.bandwidth_hz * cell.slot_seconds
-        # the shared NOMA uplink slot is only spent when someone
-        # transmits — empty T*K > M tail rounds cost downlink only
-        # (mirrors the TDMA per-device sub-slot accounting above)
+        # the shared uplink slot is only spent when someone transmits —
+        # empty T*K > M tail rounds cost downlink only (mirrors the TDMA
+        # per-device sub-slot accounting above)
         uplink_time = cell.slot_seconds if devs else 0.0
         round_time = uplink_time + dl_time
     return rates, budgets, round_time
@@ -273,7 +303,7 @@ def run_federated_learning(
     cell: chan.CellConfig,
     cfg: FLConfig,
     *,
-    uplink: str = "noma",            # "noma" | "tdma"
+    uplink: Optional[str] = None,    # "noma" | "tdma" | "ota"; None = cfg.uplink
     schedule: Optional[scheduling.Schedule] = None,
     eval_every: int = 1,
     progress: Optional[Callable[[RoundLog], None]] = None,
@@ -282,11 +312,22 @@ def run_federated_learning(
 
     dataset: repro.data.mnist_like.Dataset; shards: per-device index lists.
 
+    ``uplink`` defaults to ``cfg.uplink`` and an explicit argument
+    overrides it (re-validated against the config combos either way —
+    ``ota.check_uplink``).  Under ``"ota"`` the round's aggregate is the
+    noisy analog superposition (core/ota.py) instead of the digital
+    decode-and-average.
+
     ``cfg.horizon = "scan"`` delegates to :func:`run_horizon_scanned`
     (the whole precomputed-schedule horizon as one device program —
     config validation already rejected online policies); this host loop
     is the per-round driver online policies and oracle comparisons live in.
     """
+    uplink = cfg.uplink if uplink is None else uplink
+    ota_lib.check_uplink(
+        uplink, compression=cfg.compression, topk=cfg.topk,
+        power_mode=cfg.power_mode,
+    )
     if cfg.horizon == "scan":
         return run_horizon_scanned(
             dataset, shards, cell, cfg, uplink=uplink, schedule=schedule,
@@ -347,6 +388,14 @@ def run_federated_learning(
     dl_gains = chan.large_scale_gain(dist, cell)
     dl_time = float(chan.downlink_time_seconds(payload, dl_gains, cell))
 
+    # OTA receiver-noise keys for the whole horizon — the same host
+    # precompute the scanned driver packs, so the two drivers draw
+    # bit-identical noise per round
+    ota_keys = (
+        ota_lib.horizon_keys(cfg.seed, cfg.num_rounds)
+        if uplink == "ota" else None
+    )
+
     if engine is None:   # the batched engine evaluates through its EvalBank
         x_test = jnp.asarray(dataset.x_test)
         y_test = jnp.asarray(dataset.y_test)
@@ -377,14 +426,21 @@ def run_federated_learning(
         )
         agg_w = _agg_weights(sizes, devs)
         need_norms = policy is not None and getattr(policy, "needs_norms", True)
+        ota_round = None
+        if ota_keys is not None and devs:
+            ota_round = dict(
+                gains=gains[t, list(devs)], key=ota_keys[t],
+                pmax=float(cell.max_power_w),
+            )
         if engine is not None:
             params, bits_used, ratios, norms = engine.run_round(
-                params, devs, budgets, agg_w, need_norms=need_norms
+                params, devs, budgets, agg_w, need_norms=need_norms,
+                ota=ota_round,
             )
         else:
             params, bits_used, ratios, norms = _legacy_round(
                 params, devs, budgets, agg_w, dataset, shards, cfg, payload,
-                need_norms=need_norms, model=model,
+                need_norms=need_norms, model=model, ota=ota_round,
             )
         # empty rounds (T*K > M schedules legitimately produce empty tail
         # groups) train/aggregate nothing; the wall clock still advances and
@@ -440,6 +496,9 @@ class _HorizonPlan:
     ksizes: np.ndarray           # (T,) true per-round group sizes
     budgets_tk: np.ndarray       # (T, K) float64 uplink bit budgets, 0-padded
     aggw_tk: np.ndarray          # (T, K) float64 FedAvg weights, 0-padded
+    gains_tk: np.ndarray         # (T, K) float32 channel amplitudes, 0-padded
+                                 # (consumed only under the OTA uplink)
+    noise_keys: np.ndarray       # (T, 2) uint32 OTA receiver-noise keys
     rates: list                  # per-round (k,) float64 uplink rates
     times: np.ndarray            # (T,) cumulative simulated wall clock
     eval_idx: "np.ndarray | None"  # (T, n) eval sample plan; None = full set
@@ -490,6 +549,7 @@ def _horizon_setup(dataset, shards, cell, cfg: FLConfig, uplink, schedule):
     ksizes = np.zeros(T, np.intp)
     budgets_tk = np.zeros((T, K), np.float64)
     aggw_tk = np.zeros((T, K), np.float64)
+    gains_tk = np.zeros((T, K), np.float32)
     rates_list = []
     times = np.zeros(T, np.float64)
     t_wall = 0.0
@@ -504,25 +564,43 @@ def _horizon_setup(dataset, shards, cell, cfg: FLConfig, uplink, schedule):
         dev_tk[t, :k] = devs
         budgets_tk[t, :k] = budgets
         aggw_tk[t, :k] = _agg_weights(sizes, devs)
+        gains_tk[t, :k] = gains[t, list(devs)]
         rates_list.append(rates)
         t_wall += round_time
         times[t] = t_wall
+
+    # the same per-round noise keys the per-round driver folds on the host
+    # (zeros are never consumed outside the OTA uplink, but packing them
+    # unconditionally keeps the plan shape uplink-independent)
+    noise_keys = ota_lib.horizon_keys(cfg.seed, T)
 
     eval_idx = eval_sample_plan(
         len(dataset.y_test), cfg.eval_sample, T, cfg.seed
     )
     return _HorizonPlan(params, payload, schedule, dev_tk, ksizes,
-                        budgets_tk, aggw_tk, rates_list, times, eval_idx)
+                        budgets_tk, aggw_tk, gains_tk, noise_keys,
+                        rates_list, times, eval_idx)
 
 
-def _horizon_statics(cfg: FLConfig, payload: int, eval_full: bool) -> dict:
-    """The static kwargs of the fl_engine horizon programs, from the config."""
+def _horizon_statics(
+    cfg: FLConfig, payload: int, eval_full: bool, cell, uplink,
+) -> dict:
+    """The static kwargs of the fl_engine horizon programs, from the config.
+
+    The OTA statics are pinned to zeros outside the OTA uplink so a
+    noma/tdma run never retraces when ota_noise/ota_threshold configs vary.
+    """
+    ota = uplink == "ota"
     return dict(
         lr=float(cfg.learning_rate), epochs=int(cfg.local_epochs),
         payload=int(payload), compress=cfg.compression == "adaptive",
         paper_exact=bool(cfg.paper_exact_range),
         use_pallas=bool(cfg.use_pallas), eval_full=bool(eval_full),
         model=get_fl_model(cfg.model), topk=float(cfg.topk),
+        ota=ota,
+        ota_noise=float(cfg.ota_noise) if ota else 0.0,
+        ota_threshold=float(cfg.ota_threshold) if ota else 0.0,
+        pmax=float(cell.max_power_w) if ota else 0.0,
     )
 
 
@@ -538,9 +616,10 @@ def _eval_mask(num_rounds: int, eval_every: int) -> np.ndarray:
 def _stack_plans(plans, bank, num_rounds):
     """Stack per-instance plans along a leading axis for vmap/shard_map.
 
-    Returns ``(params_s, dev, bud, agg, eidx, eval_full, nb)`` where ``nb``
-    is the sweep-wide max scheduled batch count (one static shape for every
-    instance — the padding batches contribute exactly-zero gradients).
+    Returns ``(params_s, dev, bud, agg, gains, keys, eidx, eval_full, nb)``
+    where ``nb`` is the sweep-wide max scheduled batch count (one static
+    shape for every instance — the padding batches contribute exactly-zero
+    gradients).
     """
     params_s = jax.tree_util.tree_map(
         lambda *ls: jnp.stack(ls), *[p.params0 for p in plans]
@@ -548,6 +627,8 @@ def _stack_plans(plans, bank, num_rounds):
     dev = np.stack([p.dev_tk for p in plans])
     bud = np.stack([p.budgets_tk for p in plans])
     agg = np.stack([p.aggw_tk for p in plans])
+    gains = np.stack([p.gains_tk for p in plans])
+    keys = np.stack([p.noise_keys for p in plans])
     eval_full = plans[0].eval_idx is None
     if eval_full:
         # dummy single-row plan: the traced gather needs a concrete shape
@@ -558,7 +639,7 @@ def _stack_plans(plans, bank, num_rounds):
     nb = max(
         max(bank.n_batches_for(g) for g in p.schedule.rounds) for p in plans
     )
-    return params_s, dev, bud, agg, eidx, eval_full, nb
+    return params_s, dev, bud, agg, gains, keys, eidx, eval_full, nb
 
 
 def _assemble_horizon_result(
@@ -613,7 +694,7 @@ def run_horizon_scanned(
     cell: chan.CellConfig,
     cfg: FLConfig,
     *,
-    uplink: str = "noma",
+    uplink: Optional[str] = None,
     schedule: Optional[scheduling.Schedule] = None,
     eval_every: int = 1,
     progress: Optional[Callable[[RoundLog], None]] = None,
@@ -627,8 +708,14 @@ def run_horizon_scanned(
     (:func:`fl_engine.run_horizon`).  Same logs as the per-round driver —
     identical schedules/bits/rates/times, f32-tolerance accuracies — which
     ``tests/test_fl_scan.py`` pins across the uplink x compression x
-    policy grid.
+    policy grid (tests/test_ota.py adds the OTA row, where even the
+    accuracies are bit-identical: both drivers feed the same noise keys).
     """
+    uplink = cfg.uplink if uplink is None else uplink
+    ota_lib.check_uplink(
+        uplink, compression=cfg.compression, topk=cfg.topk,
+        power_mode=cfg.power_mode,
+    )
     plan = _horizon_setup(dataset, shards, cell, cfg, uplink, schedule)
     bank = ClientBank.build(
         dataset.x_train, dataset.y_train, shards, cfg.batch_size
@@ -646,10 +733,13 @@ def run_horizon_scanned(
         jnp.asarray(plan.dev_tk),
         jnp.asarray(plan.budgets_tk),
         jnp.asarray(plan.aggw_tk, jnp.float32),
+        jnp.asarray(plan.gains_tk),
+        jnp.asarray(plan.noise_keys),
         jnp.asarray(eval_mask),
         jnp.asarray(eidx),
         bank.xb, bank.yb, ebank.xe, ebank.ye,
-        nb=int(nb), **_horizon_statics(cfg, plan.payload, eval_full),
+        nb=int(nb),
+        **_horizon_statics(cfg, plan.payload, eval_full, cell, uplink),
     )
     return _assemble_horizon_result(
         plan, cfg, uplink, eval_mask, np.asarray(bits_tk), np.asarray(accs_t),
@@ -664,7 +754,7 @@ def run_horizon_vmapped(
     cfg: FLConfig,
     *,
     seeds,
-    uplink: str = "noma",
+    uplink: Optional[str] = None,
     eval_every: int = 1,
 ) -> list:
     """A whole seed sweep — S independent scanned horizons, one dispatch.
@@ -675,6 +765,11 @@ def run_horizon_vmapped(
     row s is the same program :func:`run_horizon_scanned` runs for that
     seed alone (the row-0 identity test pins this).
     """
+    uplink = cfg.uplink if uplink is None else uplink
+    ota_lib.check_uplink(
+        uplink, compression=cfg.compression, topk=cfg.topk,
+        power_mode=cfg.power_mode,
+    )
     seeds = [int(s) for s in seeds]
     if not seeds:
         raise ValueError("seeds must be a non-empty sequence")
@@ -692,14 +787,18 @@ def run_horizon_vmapped(
 
     T = cfg.num_rounds
     eval_mask = _eval_mask(T, eval_every)
-    params_s, dev, bud, agg, eidx, eval_full, nb = _stack_plans(plans, bank, T)
+    params_s, dev, bud, agg, gains, keys, eidx, eval_full, nb = _stack_plans(
+        plans, bank, T
+    )
 
     final_s, bits_stk, kept_stk, accs_st = fl_engine.run_horizon_vmapped(
         params_s,
         jnp.asarray(dev), jnp.asarray(bud), jnp.asarray(agg, jnp.float32),
+        jnp.asarray(gains), jnp.asarray(keys),
         jnp.asarray(eval_mask), jnp.asarray(eidx),
         bank.xb, bank.yb, ebank.xe, ebank.ye,
-        nb=int(nb), **_horizon_statics(cfg, plans[0].payload, eval_full),
+        nb=int(nb),
+        **_horizon_statics(cfg, plans[0].payload, eval_full, cell, uplink),
     )
     bits_np, accs_np = np.asarray(bits_stk), np.asarray(accs_st)
     kept_np = np.asarray(kept_stk)
@@ -721,7 +820,7 @@ def run_cell_sweep(
     *,
     num_cells: int,
     seeds_per_cell: int = 1,
-    uplink: str = "noma",
+    uplink: Optional[str] = None,
     eval_every: int = 1,
     cell_shards: Optional[int] = None,
 ) -> list:
@@ -747,6 +846,11 @@ def run_cell_sweep(
 
     Returns ``results[c][s]`` :class:`FLResult` grids.
     """
+    uplink = cfg.uplink if uplink is None else uplink
+    ota_lib.check_uplink(
+        uplink, compression=cfg.compression, topk=cfg.topk,
+        power_mode=cfg.power_mode,
+    )
     C, S = int(num_cells), int(seeds_per_cell)
     if C < 1 or S < 1:
         raise ValueError(f"need num_cells >= 1 and seeds_per_cell >= 1, "
@@ -774,8 +878,10 @@ def run_cell_sweep(
     T = cfg.num_rounds
     eval_mask = _eval_mask(T, eval_every)
     flat = [p for row in plans for p in row]
-    params_f, dev, bud, agg, eidx, eval_full, nb = _stack_plans(flat, bank, T)
-    statics = _horizon_statics(cfg, flat[0].payload, eval_full)
+    params_f, dev, bud, agg, gains, keys, eidx, eval_full, nb = _stack_plans(
+        flat, bank, T
+    )
+    statics = _horizon_statics(cfg, flat[0].payload, eval_full, cell, uplink)
 
     if shards_n == 1:
         # Single-device fast path: one run_horizon dispatch per instance.
@@ -791,6 +897,7 @@ def run_cell_sweep(
                     flat[i].params0,
                     jnp.asarray(dev[i]), jnp.asarray(bud[i]),
                     jnp.asarray(agg[i], jnp.float32),
+                    jnp.asarray(gains[i]), jnp.asarray(keys[i]),
                     emask_j, jnp.asarray(eidx[i]),
                     bank.xb, bank.yb, ebank.xe, ebank.ye,
                     nb=int(nb), **statics,
@@ -806,7 +913,8 @@ def run_cell_sweep(
     def cs(a):
         return a.reshape(C, S, *a.shape[1:])
 
-    dev, bud, agg, eidx = cs(dev), cs(bud), cs(agg), cs(eidx)
+    dev, bud, agg = cs(dev), cs(bud), cs(agg)
+    gains, keys, eidx = cs(gains), cs(keys), cs(eidx)
     params_cs = jax.tree_util.tree_map(
         lambda l: l.reshape(C, S, *l.shape[1:]), params_f
     )
@@ -818,6 +926,8 @@ def run_cell_sweep(
         dev = np.concatenate([dev, dev[:pad]])
         bud = np.concatenate([bud, bud[:pad]])
         agg = np.concatenate([agg, agg[:pad]])
+        gains = np.concatenate([gains, gains[:pad]])
+        keys = np.concatenate([keys, keys[:pad]])
         eidx = np.concatenate([eidx, eidx[:pad]])
         params_cs = jax.tree_util.tree_map(
             lambda l: jnp.concatenate([l, l[:pad]]), params_cs
@@ -826,6 +936,7 @@ def run_cell_sweep(
     final_cs, bits_cstk, kept_cstk, accs_cst = fl_engine.run_horizon_sharded(
         params_cs,
         jnp.asarray(dev), jnp.asarray(bud), jnp.asarray(agg, jnp.float32),
+        jnp.asarray(gains), jnp.asarray(keys),
         jnp.asarray(eval_mask), jnp.asarray(eidx),
         bank.xb, bank.yb, ebank.xe, ebank.ye,
         shards=shards_n, nb=int(nb), **statics,

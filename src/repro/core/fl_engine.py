@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression as comp
+from repro.core import ota as ota_lib
 from repro.core import quantization as qlib
 from repro.data.client_bank import (
     BucketedClientBank, ClientBank, EvalBank, eval_sample_plan,
@@ -187,9 +188,9 @@ def _sparse_quantize_aggregate(
 
 
 def _train_quantize_aggregate(
-    params, x, y, budgets, agg_w,
+    params, x, y, budgets, agg_w, gains_k, noise_key,
     *, lr, epochs, payload, compress, paper_exact, use_pallas, need_norms,
-    model, topk,
+    model, topk, ota, ota_noise, ota_threshold, pmax,
 ):
     """The round body on gathered client rows: vmapped local SGD -> norms ->
     traced per-client quantization -> weighted aggregation.
@@ -206,6 +207,16 @@ def _train_quantize_aggregate(
     Zero-weight rows (``agg_w[k] = 0``: schedule padding in the scan path)
     still train but contribute exactly zero to the aggregate, so padded
     tail/empty rounds leave the parameters untouched.
+
+    ``ota`` (static) swaps the digital quantize+aggregate stages for the
+    over-the-air analog superposition (:func:`repro.core.ota.superpose_tree`
+    — the noisy channel sum itself is the aggregate): ``gains_k`` (K,) are
+    the round's channel amplitudes, ``noise_key`` (2,) uint32 seeds the
+    receiver noise, and ota_noise / ota_threshold / pmax parameterize the
+    signal model.  Outside OTA the two extra operands are dummy zeros the
+    compiler drops (dead inputs), so the digital paths trace the identical
+    program they always did; bits are logged as 32 (analog — nothing is
+    quantized on air).
     """
     k = x.shape[0]
 
@@ -229,6 +240,18 @@ def _train_quantize_aggregate(
         norms = jnp.zeros((k,), jnp.float32)
 
     kept = jnp.zeros((k,), jnp.int32)
+
+    if ota:
+        update = ota_lib.superpose_tree(
+            deltas, gains_k, agg_w, noise_key,
+            pmax=pmax, noise_std=ota_noise, threshold=ota_threshold,
+            use_pallas=use_pallas,
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: p + u, params, update
+        )
+        bits = jnp.full((k,), 32, jnp.int32)
+        return new_params, bits, kept, norms
 
     if compress and topk < 1.0:
         update, kept, bits = _sparse_quantize_aggregate(
@@ -291,14 +314,15 @@ def _train_quantize_aggregate(
 _ROUND_STATICS = (
     "lr", "epochs", "payload", "compress", "paper_exact",
     "use_pallas", "need_norms", "model", "topk",
+    "ota", "ota_noise", "ota_threshold", "pmax",
 )
 
 
 @functools.partial(jax.jit, static_argnames=("nb",) + _ROUND_STATICS)
 def _round_step(
-    params, xb, yb, dev_idx, budgets, agg_w,
+    params, xb, yb, dev_idx, budgets, agg_w, gains_k, noise_key,
     *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, need_norms,
-    model, topk,
+    model, topk, ota, ota_noise, ota_threshold, pmax,
 ):
     """gather -> shared round body (:func:`_train_quantize_aggregate`).
 
@@ -311,26 +335,30 @@ def _round_step(
     x = xb[dev_idx, :nb]                 # (K, nb, BS, ...)
     y = yb[dev_idx, :nb]                 # (K, nb, BS, ...)
     return _train_quantize_aggregate(
-        params, x, y, budgets, agg_w, lr=lr, epochs=epochs, payload=payload,
+        params, x, y, budgets, agg_w, gains_k, noise_key,
+        lr=lr, epochs=epochs, payload=payload,
         compress=compress, paper_exact=paper_exact, use_pallas=use_pallas,
-        need_norms=need_norms, model=model, topk=topk,
+        need_norms=need_norms, model=model, topk=topk, ota=ota,
+        ota_noise=ota_noise, ota_threshold=ota_threshold, pmax=pmax,
     )
 
 
 @functools.partial(jax.jit, static_argnames=_ROUND_STATICS)
 def _round_step_gathered(
-    params, x, y, budgets, agg_w,
+    params, x, y, budgets, agg_w, gains_k, noise_key,
     *, lr, epochs, payload, compress, paper_exact, use_pallas, need_norms,
-    model, topk,
+    model, topk, ota, ota_noise, ota_threshold, pmax,
 ):
     """Round body on pre-gathered (K, nb, ...) rows — the bucketed-bank
     path, where the K-row gather spans several per-bucket banks and runs
     outside this jit (:meth:`BucketedClientBank.gather`).  Same body, so
     bucketed rounds are bit-identical to the padded bank's."""
     return _train_quantize_aggregate(
-        params, x, y, budgets, agg_w, lr=lr, epochs=epochs, payload=payload,
+        params, x, y, budgets, agg_w, gains_k, noise_key,
+        lr=lr, epochs=epochs, payload=payload,
         compress=compress, paper_exact=paper_exact, use_pallas=use_pallas,
-        need_norms=need_norms, model=model, topk=topk,
+        need_norms=need_norms, model=model, topk=topk, ota=ota,
+        ota_noise=ota_noise, ota_threshold=ota_threshold, pmax=pmax,
     )
 
 
@@ -340,15 +368,15 @@ def _round_step_gathered(
 
 _HORIZON_STATICS = (
     "nb", "lr", "epochs", "payload", "compress", "paper_exact", "use_pallas",
-    "eval_full", "model", "topk",
+    "eval_full", "model", "topk", "ota", "ota_noise", "ota_threshold", "pmax",
 )
 
 
 def _horizon_core(
-    params, dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn, xb, yb,
-    xe, ye,
+    params, dev_tk, budgets_tk, agg_tk, gains_tk, keys_t, eval_mask_t,
+    eval_idx_tn, xb, yb, xe, ye,
     *, lr, epochs, payload, compress, paper_exact, use_pallas, eval_full,
-    model, topk,
+    model, topk, ota, ota_noise, ota_threshold, pmax,
 ):
     """One whole horizon as a single ``lax.scan`` over rounds.
 
@@ -357,12 +385,15 @@ def _horizon_core(
     dev_tk (T, K) int32 device ids (0-padded past each round's true group
     size), budgets_tk (T, K) f32 uplink bit budgets, agg_tk (T, K) f32
     FedAvg weights (zero on padding, which multiplies the padded rows out
-    of the aggregate exactly), eval_mask_t (T,) bool, and eval_idx_tn
-    (T, n) eval-row gather plans (ignored when ``eval_full``).  Emits the
-    per-round (T, K) bit-widths, (T, K) kept-coordinate counts (zeros
-    unless the top-k stage is on) and (T,) sampled test accuracies (NaN on
-    rounds ``eval_mask_t`` skips — the host forward-fills, mirroring the
-    per-round driver's repeated-accuracy logging under ``eval_every``).
+    of the aggregate exactly), gains_tk (T, K) f32 channel amplitudes and
+    keys_t (T, 2) uint32 receiver-noise keys (both consumed only under the
+    OTA uplink; dummy zeros otherwise), eval_mask_t (T,) bool, and
+    eval_idx_tn (T, n) eval-row gather plans (ignored when ``eval_full``).
+    Emits the per-round (T, K) bit-widths, (T, K) kept-coordinate counts
+    (zeros unless the top-k stage is on) and (T,) sampled test accuracies
+    (NaN on rounds ``eval_mask_t`` skips — the host forward-fills,
+    mirroring the per-round driver's repeated-accuracy logging under
+    ``eval_every``).
 
     Un-jitted on purpose: :func:`run_horizon` jits it directly,
     :func:`run_horizon_vmapped` vmaps it over a seeds axis, and
@@ -371,13 +402,15 @@ def _horizon_core(
     """
 
     def body(p, inp):
-        dev, bud, w, do_eval, eidx = inp
+        dev, bud, w, g, nk, do_eval, eidx = inp
         x = xb[dev]                     # (K, nb, BS, ...)
         y = yb[dev]                     # (K, nb, BS, ...)
         p2, bits, kept, _ = _train_quantize_aggregate(
-            p, x, y, bud, w, lr=lr, epochs=epochs, payload=payload,
+            p, x, y, bud, w, g, nk, lr=lr, epochs=epochs, payload=payload,
             compress=compress, paper_exact=paper_exact,
             use_pallas=use_pallas, need_norms=False, model=model, topk=topk,
+            ota=ota, ota_noise=ota_noise, ota_threshold=ota_threshold,
+            pmax=pmax,
         )
 
         def ev(q):
@@ -392,17 +425,18 @@ def _horizon_core(
 
     final, (bits_t, kept_t, acc_t) = jax.lax.scan(
         body, params,
-        (dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn),
+        (dev_tk, budgets_tk, agg_tk, gains_tk, keys_t, eval_mask_t,
+         eval_idx_tn),
     )
     return final, bits_t, kept_t, acc_t
 
 
 @functools.partial(jax.jit, static_argnames=_HORIZON_STATICS)
 def run_horizon(
-    params, dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn, xb, yb,
-    xe, ye,
+    params, dev_tk, budgets_tk, agg_tk, gains_tk, keys_t, eval_mask_t,
+    eval_idx_tn, xb, yb, xe, ye,
     *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, eval_full,
-    model, topk,
+    model, topk, ota, ota_noise, ota_threshold, pmax,
 ):
     """One precomputed-schedule horizon, one dispatch (see _horizon_core).
 
@@ -413,46 +447,51 @@ def run_horizon(
     exactly-zero gradients.
     """
     return _horizon_core(
-        params, dev_tk, budgets_tk, agg_tk, eval_mask_t, eval_idx_tn,
-        xb[:, :nb], yb[:, :nb], xe, ye,
+        params, dev_tk, budgets_tk, agg_tk, gains_tk, keys_t, eval_mask_t,
+        eval_idx_tn, xb[:, :nb], yb[:, :nb], xe, ye,
         lr=lr, epochs=epochs, payload=payload, compress=compress,
         paper_exact=paper_exact, use_pallas=use_pallas, eval_full=eval_full,
-        model=model, topk=topk,
+        model=model, topk=topk, ota=ota, ota_noise=ota_noise,
+        ota_threshold=ota_threshold, pmax=pmax,
     )
 
 
 @functools.partial(jax.jit, static_argnames=_HORIZON_STATICS)
 def run_horizon_vmapped(
-    params_s, dev_stk, budgets_stk, agg_stk, eval_mask_t, eval_idx_stn,
-    xb, yb, xe, ye,
+    params_s, dev_stk, budgets_stk, agg_stk, gains_stk, keys_st, eval_mask_t,
+    eval_idx_stn, xb, yb, xe, ye,
     *, nb, lr, epochs, payload, compress, paper_exact, use_pallas, eval_full,
-    model, topk,
+    model, topk, ota, ota_noise, ota_threshold, pmax,
 ):
     """A whole seed sweep (S independent horizons), one dispatch.
 
-    Leading axis S on params / schedule tensors / eval plans; the client
-    bank and test set are shared (the sweep varies channel draws, model
-    init and schedules — not the data).  ``eval_mask_t`` is shared too
-    (eval cadence is a config, not a draw).  Row s is the same program
-    :func:`run_horizon` runs for that seed alone.
+    Leading axis S on params / schedule tensors / eval plans / noise keys;
+    the client bank and test set are shared (the sweep varies channel
+    draws, model init, schedules and receiver noise — not the data).
+    ``eval_mask_t`` is shared too (eval cadence is a config, not a draw).
+    Row s is the same program :func:`run_horizon` runs for that seed alone.
     """
     xbs, ybs = xb[:, :nb], yb[:, :nb]
 
-    def one(p, d, b, a, ei):
+    def one(p, d, b, a, g, nk, ei):
         return _horizon_core(
-            p, d, b, a, eval_mask_t, ei, xbs, ybs, xe, ye,
+            p, d, b, a, g, nk, eval_mask_t, ei, xbs, ybs, xe, ye,
             lr=lr, epochs=epochs, payload=payload, compress=compress,
             paper_exact=paper_exact, use_pallas=use_pallas,
-            eval_full=eval_full, model=model, topk=topk,
+            eval_full=eval_full, model=model, topk=topk, ota=ota,
+            ota_noise=ota_noise, ota_threshold=ota_threshold, pmax=pmax,
         )
 
-    return jax.vmap(one)(params_s, dev_stk, budgets_stk, agg_stk, eval_idx_stn)
+    return jax.vmap(one)(
+        params_s, dev_stk, budgets_stk, agg_stk, gains_stk, keys_st,
+        eval_idx_stn,
+    )
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_horizon_fn(
     shards, nb, lr, epochs, payload, compress, paper_exact, use_pallas,
-    eval_full, model, topk,
+    eval_full, model, topk, ota, ota_noise, ota_threshold, pmax,
 ):
     """Build (and cache) the jitted shard_map'd cell sweep for a mesh of
     ``shards`` local devices (the scheduler's vertex-reduction pattern,
@@ -469,21 +508,23 @@ def _sharded_horizon_fn(
     mesh = cell_mesh(shards)
     axis = rules.CELL_AXIS
 
-    def fn(params_cs, dev, bud, agg, emask, eidx, xb, yb, xe, ye):
+    def fn(params_cs, dev, bud, agg, gains, keys, emask, eidx, xb, yb, xe,
+           ye):
         xbs, ybs = xb[:, :nb], yb[:, :nb]
 
-        def per_seed(p, d, b, a, ei):
+        def per_seed(p, d, b, a, g, nk, ei):
             return _horizon_core(
-                p, d, b, a, emask, ei, xbs, ybs, xe, ye,
+                p, d, b, a, g, nk, emask, ei, xbs, ybs, xe, ye,
                 lr=lr, epochs=epochs, payload=payload, compress=compress,
                 paper_exact=paper_exact, use_pallas=use_pallas,
-                eval_full=eval_full, model=model, topk=topk,
+                eval_full=eval_full, model=model, topk=topk, ota=ota,
+                ota_noise=ota_noise, ota_threshold=ota_threshold, pmax=pmax,
             )
 
-        def per_cell(p, d, b, a, ei):
-            return jax.vmap(per_seed)(p, d, b, a, ei)
+        def per_cell(p, d, b, a, g, nk, ei):
+            return jax.vmap(per_seed)(p, d, b, a, g, nk, ei)
 
-        return jax.vmap(per_cell)(params_cs, dev, bud, agg, eidx)
+        return jax.vmap(per_cell)(params_cs, dev, bud, agg, gains, keys, eidx)
 
     return jax.jit(shard_map(
         fn, mesh=mesh,
@@ -494,10 +535,10 @@ def _sharded_horizon_fn(
 
 
 def run_horizon_sharded(
-    params_cs, dev_cstk, budgets_cstk, agg_cstk, eval_mask_t, eval_idx_cstn,
-    xb, yb, xe, ye,
+    params_cs, dev_cstk, budgets_cstk, agg_cstk, gains_cstk, keys_cst,
+    eval_mask_t, eval_idx_cstn, xb, yb, xe, ye,
     *, shards, nb, lr, epochs, payload, compress, paper_exact, use_pallas,
-    eval_full, model, topk,
+    eval_full, model, topk, ota, ota_noise, ota_threshold, pmax,
 ):
     """A (C, S) cells-x-seeds sweep with the cell axis sharded over a mesh.
 
@@ -509,11 +550,12 @@ def run_horizon_sharded(
     fn = _sharded_horizon_fn(
         int(shards), int(nb), float(lr), int(epochs), int(payload),
         bool(compress), bool(paper_exact), bool(use_pallas), bool(eval_full),
-        model, float(topk),
+        model, float(topk), bool(ota), float(ota_noise), float(ota_threshold),
+        float(pmax),
     )
     return fn(
-        params_cs, dev_cstk, budgets_cstk, agg_cstk, eval_mask_t,
-        eval_idx_cstn, xb, yb, xe, ye,
+        params_cs, dev_cstk, budgets_cstk, agg_cstk, gains_cstk, keys_cst,
+        eval_mask_t, eval_idx_cstn, xb, yb, xe, ye,
     )
 
 
@@ -576,12 +618,21 @@ class BatchedRoundEngine:
             jnp.asarray(self._eval_idx[t]), model=self.model,
         ))
 
-    def run_round(self, params, devs, budgets, agg_w, *, need_norms: bool):
+    def run_round(
+        self, params, devs, budgets, agg_w, *, need_norms: bool, ota=None,
+    ):
         """Run one round's local training + upload + aggregation.
 
         devs: scheduled device ids; budgets: per-device uplink bit budgets
         (the driver computed both — identically for either engine);
         agg_w: normalized FedAvg weights |D_k| / sum |D_k|.
+
+        ``ota`` (dict or None) switches the upload to the over-the-air
+        analog superposition: the driver passes ``gains`` (K,) channel
+        amplitudes, ``key`` (2,) uint32 receiver-noise key and ``pmax``
+        for the round (noise std / truncation threshold come from the
+        config) and the aggregate becomes the noisy channel sum
+        (:func:`repro.core.ota.superpose_tree`).
 
         Returns ``(params, bits, ratios, norms)`` with bits/ratios as
         np arrays matching the legacy per-round log entries and norms a
@@ -604,18 +655,35 @@ class BatchedRoundEngine:
             use_pallas=bool(cfg.use_pallas), need_norms=bool(need_norms),
             model=self.model, topk=float(cfg.topk),
         )
+        if ota is not None:
+            statics.update(
+                ota=True, ota_noise=float(cfg.ota_noise),
+                ota_threshold=float(cfg.ota_threshold),
+                pmax=float(ota["pmax"]),
+            )
+            gains_dev = jnp.asarray(np.asarray(ota["gains"]), jnp.float32)
+            key_dev = jnp.asarray(ota["key"])
+        else:
+            # fixed dummies: the digital paths never read them, and pinning
+            # the statics avoids a retrace per (noise, threshold) config
+            statics.update(
+                ota=False, ota_noise=0.0, ota_threshold=0.0, pmax=0.0,
+            )
+            gains_dev = jnp.zeros((k,), jnp.float32)
+            key_dev = jnp.zeros((2,), jnp.uint32)
         budgets_dev = jnp.asarray(np.asarray(budgets, np.float64))
         agg_dev = jnp.asarray(np.asarray(agg_w, np.float64), jnp.float32)
         if isinstance(self.bank, BucketedClientBank):
             x, y = self.bank.gather(devs, nb)
             params, bits, kept, norms = _round_step_gathered(
-                params, x, y, budgets_dev, agg_dev, **statics
+                params, x, y, budgets_dev, agg_dev, gains_dev, key_dev,
+                **statics
             )
         else:
             params, bits, kept, norms = _round_step(
                 params, self.bank.xb, self.bank.yb,
                 jnp.asarray(devs, jnp.int32), budgets_dev, agg_dev,
-                nb=nb, **statics,
+                gains_dev, key_dev, nb=nb, **statics,
             )
         if compress and cfg.topk < 1.0:
             # honest sparse accounting: on-air size from the realized

@@ -426,7 +426,36 @@ def mapel_batched(
 # PowerAllocator: the one object that owns power allocation
 # --------------------------------------------------------------------------
 
-POWER_MODES = ("max", "mapel")
+POWER_MODES = ("max", "mapel", "ota-align")
+
+
+def ota_align_powers(gains, weights, pmax: float) -> np.ndarray:
+    """OTA alignment powers: truncated channel inversion at schedule time.
+
+    Under the over-the-air uplink (core/ota.py) device k transmits
+    ``sqrt(eta) * w_k / h_k`` per coordinate, so its *planned* power (the
+    control-plane view: unit-norm update convention — realized per-round
+    energies are data the scheduler never sees) is
+
+        p_k = eta * w_k^2 / h_k^2,     eta = min_k pmax * h_k^2 / w_k^2
+
+    — the binding (weakest-inversion) device transmits at exactly pmax and
+    everyone else backs off so the received amplitudes stay aligned with
+    the FedAvg weights.  Zero-gain or zero-weight devices are excluded
+    from the eta min and allocated zero (they cannot invert / contribute
+    nothing).  Input (unsorted) order in, same order out.
+    """
+    g = np.asarray(gains, dtype=np.float64)
+    w = np.asarray(weights, dtype=np.float64)
+    live = (g > 0.0) & (w > 0.0)
+    if not live.any():
+        return np.zeros(g.shape, dtype=np.float64)
+    with np.errstate(divide="ignore"):
+        caps = np.where(live, pmax * g * g / np.maximum(w * w, 1e-300), np.inf)
+    eta = float(np.min(caps))
+    with np.errstate(divide="ignore"):
+        p = np.where(live, eta * w * w / np.maximum(g * g, 1e-300), 0.0)
+    return np.minimum(p, pmax)   # the min-cap guarantees this; belt and braces
 
 
 @dataclasses.dataclass(frozen=True)
@@ -437,7 +466,9 @@ class PowerAllocator:
     ``solve_batched`` allocates V groups in one call ((V, K) -> (V, K)).
     For ``mode="mapel"`` the batched form is the lockstep polyblock
     (:func:`mapel_batched`), which reproduces the sequential solver
-    group-for-group; ``mode="max"`` is the no-power-control baseline.
+    group-for-group; ``mode="max"`` is the no-power-control baseline;
+    ``mode="ota-align"`` is the over-the-air channel-inversion alignment
+    (:func:`ota_align_powers` — FLConfig restricts it to uplink="ota").
 
     Instances are also callable ((gains, weights) -> powers) and expose
     ``batched`` as an alias of ``solve_batched``, so every legacy
@@ -460,6 +491,8 @@ class PowerAllocator:
         """(K,) powers for one group, input (unsorted) order."""
         if self.mode == "max":
             return max_power(gains_k, self.pmax)
+        if self.mode == "ota-align":
+            return ota_align_powers(gains_k, weights_k, self.pmax)
         return mapel(
             gains_k, weights_k, self.pmax, self.noise_power, eps=self.eps
         ).powers
@@ -468,6 +501,13 @@ class PowerAllocator:
         """(V, K) powers for V groups in one call."""
         if self.mode == "max":
             return np.full(np.shape(gains_vk), self.pmax, dtype=np.float64)
+        if self.mode == "ota-align":
+            gains_vk = np.asarray(gains_vk, dtype=np.float64)
+            weights_vk = np.asarray(weights_vk, dtype=np.float64)
+            return np.stack([
+                ota_align_powers(g, w, self.pmax)
+                for g, w in zip(gains_vk, weights_vk)
+            ]) if len(gains_vk) else np.zeros(np.shape(gains_vk))
         return mapel_batched(
             gains_vk, weights_vk, self.pmax, self.noise_power, eps=self.eps
         ).powers

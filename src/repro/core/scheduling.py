@@ -42,6 +42,12 @@ Registered policies
   * ``age-fair`` — online; staleness-boosted weighted rates
     (1 + age_k) · w_k R_k (Yang et al., arXiv:1908.06287) so no device
     starves over long horizons.
+  * ``matching-pursuit`` — online; greedily grows the round's device set by
+    residual aggregation-error decrease (the OTA companion policy: omitted
+    devices cost their weighted update energy, admitted devices pay the
+    channel-inversion noise penalty lambda * max (w n / h)^2 with
+    lambda = ota_noise^2 / pmax).  With ``ota_noise = 0`` it degenerates
+    to top-K by weighted update norm.
 
 How to add a policy
 -------------------
@@ -848,6 +854,8 @@ class PolicyConfig:
     backend: str = "numpy"          # lazy greedy driver (SCHEDULER_BACKENDS)
     scorer: str = "xla"             # fused-backend vertex scorer (xla | pallas)
     shards: "int | None" = None     # fused-backend vertex-axis device shards
+    ota_noise: float = 0.0          # OTA receiver noise std (matching-pursuit
+                                    # aggregation-error model; 0 = noiseless)
     seed: int = 0
 
 
@@ -1171,3 +1179,84 @@ class AgeFairPolicy(_ScoreTopKPolicy):
     def _score(self, t, solo, obs):
         age = (t - obs.last_round).astype(np.float64)
         return (1.0 + age) * solo
+
+
+@register_policy("matching-pursuit")
+class MatchingPursuitPolicy:
+    """Greedy residual-error device selection for over-the-air aggregation.
+
+    The analog PS estimate (core/ota.py) misses the updates of unscheduled
+    devices and pays receiver noise amplified by the weakest admitted
+    channel (truncated inversion: eta <= pmax h_k^2 / (w_k n_k)^2 for every
+    admitted k).  Modeling the round's aggregation error of a candidate set
+    S as
+
+        E(S) = sum_{k not in S} (w_k n_k)^2
+             + lambda * max_{k in S} (w_k n_k / h_k)^2,
+        lambda = ota_noise^2 / pmax,
+
+    the policy runs a matching-pursuit sweep: start from S = {} (error =
+    total update energy), repeatedly admit the device giving the largest
+    *strict* decrease of E, and stop at K devices or when no admission
+    helps — a weak-channel device whose noise penalty outweighs its energy
+    contribution is left out even when slots remain.  With ``ota_noise = 0``
+    the noise term vanishes and the sweep reduces to top-K by w_k n_k.
+
+    Norm estimates follow ``update-aware``'s convention: devices never yet
+    observed take the running mean of observed norms (1.0 before any
+    observation) and observed-zero norms are floored, so round 0 is a pure
+    channel/weight ranking and no device is starved forever.
+    """
+
+    online = True
+    respects_c1 = False
+    needs_norms = True
+
+    def init_state(self, gains_tm, weights_m, cfg: PolicyConfig):
+        return {
+            "gains": np.asarray(gains_tm),
+            "weights": np.asarray(weights_m),
+            "cfg": cfg,
+        }
+
+    @staticmethod
+    def _norm_estimates(obs: Observation) -> np.ndarray:
+        norms = obs.update_norms.copy()
+        seen = obs.participation > 0
+        default = float(norms[seen].mean()) if seen.any() else 1.0
+        default = max(default, 1e-12)
+        norms[~seen] = default
+        norms[seen] = np.maximum(norms[seen], 1e-3 * default)
+        return norms
+
+    def select_round(self, t, state, obs):
+        cfg = state["cfg"]
+        gains = np.asarray(state["gains"][t], dtype=np.float64)
+        weights = np.asarray(state["weights"], dtype=np.float64)
+        m = weights * self._norm_estimates(obs)        # w_k n_k
+        energy = m * m                                 # omission cost
+        lam = float(cfg.ota_noise) ** 2 / max(float(cfg.pmax), 1e-300)
+        if lam > 0.0:
+            with np.errstate(divide="ignore"):
+                pen = lam * np.where(gains > 0.0, (m / gains) ** 2, np.inf)
+        else:
+            pen = np.zeros_like(m)     # explicit: avoids 0 * inf = nan
+        k = min(cfg.group_size, len(m))
+        selected: "list[int]" = []
+        in_s = np.zeros(len(m), dtype=bool)
+        residual = float(energy.sum())     # sum over k not in S
+        noise_term = 0.0                   # lambda * max admitted penalty
+        cur = residual + noise_term
+        for _ in range(k):
+            cand_noise = np.maximum(noise_term, pen)
+            e = (residual - energy) + cand_noise
+            e[in_s] = np.inf
+            j = int(np.argmin(e))
+            if not e[j] < cur:     # admit only on strict decrease
+                break
+            selected.append(j)
+            in_s[j] = True
+            residual -= float(energy[j])
+            noise_term = max(noise_term, float(pen[j]))
+            cur = float(e[j])
+        return tuple(selected), state

@@ -131,3 +131,91 @@ def weighted_aggregate_pallas(
         slabs,
     )
     return out.reshape(-1)[:n].reshape(out_shape)
+
+
+def _ota_kernel(c_ref, coeff_ref, n_ref, o_ref, *, k: int):
+    # c_ref: (K, BLOCK_ROWS, LANE) raw updates; coeff_ref: (K,) masked
+    # w_k / sum(w); n_ref: (BLOCK_ROWS, LANE) pre-scaled receiver noise
+    acc = n_ref[...].astype(jnp.float32)
+    for i in range(k):  # K is small and static: unrolled VPU adds
+        acc = acc + c_ref[i, :, :].astype(jnp.float32) * coeff_ref[i]
+    o_ref[...] = acc
+
+
+def _ota_block(flat, coeff, noise, *, interpret):
+    """One fused scale+superpose+denoise pallas_call over a (K, n) slab
+    plus its (n,) noise strip; returns (n,)."""
+    k, n = flat.shape
+    pad = (-n) % TILE_ELEMS
+    padded = jnp.pad(flat, ((0, 0), (0, pad)))
+    tiles = padded.reshape(k, -1, LANE)
+    noise_tiles = jnp.pad(noise, (0, pad)).reshape(-1, LANE)
+    rows = tiles.shape[1]
+    grid = (rows // BLOCK_ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_ota_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, BLOCK_ROWS, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(tiles, coeff, noise_tiles)
+    return out.reshape(-1)[:n]
+
+
+def ota_aggregate_pallas(
+    deltas: jax.Array,    # (K, ...) raw float client updates, any trailing shape
+    coeff: jax.Array,     # (K,) masked OTA weights w_k / sum_A(w) (traced ok)
+    noise: jax.Array,     # flattened receiver noise, already 1/sqrt(eta)-scaled
+    *,
+    interpret: bool = True,
+    chunk_elems: int | None = None,
+) -> jax.Array:
+    """sum_k coeff_k * deltas_k + noise, shaped like ``deltas[0]``.
+
+    The over-the-air receiver reduction (core/ota.py signal model): no
+    dequant divisor — updates go over the air in analog, so the kernel
+    fuses the FedAvg scaling, the superposition sum, and the additive
+    receiver noise into one pass per tile.  ``noise`` must carry the full
+    1/(sqrt(eta) * sum w) referral already (it is data, not a kernel
+    parameter) and is flattened to the payload length.  The XLA einsum
+    ``einsum("k,kn->n", coeff, flat) + noise`` is the equality oracle.
+
+    K = 0 rounds degenerate to the bare noise floor; payloads above
+    ``chunk_elems`` reuse the (K, chunk) slab layout of
+    :func:`weighted_aggregate_pallas` with the noise strip chunked
+    alongside, so only one brick is tile-padded at a time.
+    """
+    k = deltas.shape[0]
+    out_shape = deltas.shape[1:]
+    n = 1
+    for d in out_shape:
+        n *= int(d)
+    if n == 0:
+        return jnp.zeros(out_shape, jnp.float32)
+    noise = noise.reshape(-1).astype(jnp.float32)
+    if k == 0:
+        return noise[:n].reshape(out_shape)
+    flat = deltas.reshape(k, n)
+    coeff = coeff.astype(jnp.float32)
+    if chunk_elems is None:
+        chunk_elems = DEFAULT_CHUNK_ELEMS
+    chunk_elems = max(int(chunk_elems), TILE_ELEMS)
+    if n <= chunk_elems:
+        return _ota_block(
+            flat, coeff, noise, interpret=interpret
+        ).reshape(out_shape)
+    pad = (-n) % chunk_elems
+    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    noise = jnp.pad(noise, (0, pad))
+    slabs = flat.reshape(k, -1, chunk_elems).transpose(1, 0, 2)
+    noise_slabs = noise.reshape(-1, chunk_elems)
+    out = jax.lax.map(
+        lambda sn: _ota_block(sn[0], coeff, sn[1], interpret=interpret),
+        (slabs, noise_slabs),
+    )
+    return out.reshape(-1)[:n].reshape(out_shape)

@@ -21,6 +21,7 @@ Logical axis vocabulary (resolved in repro/sharding/rules.py):
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional
 
 import jax
@@ -67,11 +68,18 @@ def _is_spec(x) -> bool:
 
 
 def init_params(schema, key: jax.Array):
-    """Materialize a schema pytree; each leaf gets a path-derived subkey."""
+    """Materialize a schema pytree; each leaf gets a path-derived subkey.
+
+    The fold constant is a CRC32 of the tree path, not Python's ``hash``:
+    string hashing is salted per process (PYTHONHASHSEED), which made two
+    runs of the same config initialize different models — every
+    "reproducible from (inputs, config) alone" claim downstream rests on
+    this digest being process-independent.
+    """
     flat, treedef = jax.tree_util.tree_flatten_with_path(schema, is_leaf=_is_spec)
     leaves = []
     for path, spec in flat:
-        h = abs(hash(jax.tree_util.keystr(path))) % (2**31)
+        h = zlib.crc32(jax.tree_util.keystr(path).encode()) % (2**31)
         leaves.append(_materialize(spec, jax.random.fold_in(key, h)))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 

@@ -143,14 +143,15 @@ CELL_AXIS = "cell"
 def cell_sweep_in_specs() -> tuple:
     """in_specs for the shard_map'd cell sweep (fl_engine.run_horizon_sharded).
 
-    Positional contract: (params_cs, dev, budgets, agg_w, eval_mask,
-    eval_idx, xb, yb, xe, ye) — per-instance stacks shard their leading
-    cell axis; the eval cadence mask, the client bank, and the test set
-    are replicated.
+    Positional contract: (params_cs, dev, budgets, agg_w, gains, noise_keys,
+    eval_mask, eval_idx, xb, yb, xe, ye) — per-instance stacks (including
+    the OTA channel gains and receiver-noise keys) shard their leading cell
+    axis; the eval cadence mask, the client bank, and the test set are
+    replicated.
     """
     c = P(CELL_AXIS)
     r = P()
-    return (c, c, c, c, r, c, r, r, r, r)
+    return (c, c, c, c, c, c, r, c, r, r, r, r)
 
 
 def cell_sweep_out_specs() -> tuple:

@@ -92,6 +92,30 @@ def test_padded_build_warns_over_memory_fraction(rng, monkeypatch):
         ClientBank.build(x, y, shards, 4)
 
 
+def test_bank_memory_warning_edges(rng, monkeypatch):
+    """The accounting's edge contract: an unreported or nonsensical device
+    limit never warns (CPU backends return None), ``mem_fraction`` is a
+    real knob (a tight fraction trips even a roomy device), and the
+    bucketed layout — the remedy the warning recommends — builds silently
+    on any device."""
+    x, y, shards = _skewed_world(rng)
+    bank_bytes = ClientBank.build(x, y, shards, 4).nbytes
+    for no_limit in (None, 0, -1):
+        monkeypatch.setattr(cb, "_device_memory_limit", lambda v=no_limit: v)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            ClientBank.build(x, y, shards, 4)
+    monkeypatch.setattr(cb, "_device_memory_limit",
+                        lambda: int(100 * bank_bytes))
+    with pytest.warns(ResourceWarning, match="bucketed"):
+        ClientBank.build(x, y, shards, 4, mem_fraction=0.001)
+    # one-byte device: the padded bank would warn, the remedy must not
+    monkeypatch.setattr(cb, "_device_memory_limit", lambda: 1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        BucketedClientBank.build(x, y, shards, 4)
+
+
 def test_token_shards_bank_shapes():
     ds = make_token_dataset(vocab_size=32, num_samples=64, seq_len=6, seed=0)
     shards = [np.arange(0, 20), np.arange(20, 33), np.arange(33, 57)]

@@ -267,7 +267,13 @@ def test_flconfig_accepts_every_registered_policy():
         cfg = FLConfig(scheduler=name)
         assert cfg.scheduler == name
     for mode in power_lib.POWER_MODES:
-        FLConfig(power_mode=mode)
+        # ota-align is the analog uplink's allocator and rejects digital
+        # configs by design (ota.check_uplink), so give it its home combo
+        kw = (
+            {"uplink": "ota", "compression": "none"}
+            if mode == "ota-align" else {}
+        )
+        FLConfig(power_mode=mode, **kw)
 
 
 def test_live_mode_rejects_invalid_policy_groups():

@@ -88,6 +88,48 @@ def test_mapel_batched_empty():
     assert out.weighted_rates.shape == (0,)
 
 
+def test_mapel_batched_k1_closed_form_matches_sequential():
+    """K=1 takes the closed-form branch in BOTH drivers: full power, the
+    interference-free rate, zero iterations, zero gap — and the batched
+    rows must equal the sequential solves bit for bit (same formula, no
+    polyblock float drift to hide behind)."""
+    rng = np.random.default_rng(11)
+    gains = np.abs(rng.normal(1e-6, 5e-7, (4, 1))) + 1e-8
+    w = rng.dirichlet(np.ones(1), size=4)
+    batched = power.mapel_batched(gains, w, PMAX, NOISE, eps=1e-3)
+    np.testing.assert_array_equal(batched.powers, np.full((4, 1), PMAX))
+    np.testing.assert_array_equal(batched.iterations, np.zeros(4, dtype=int))
+    np.testing.assert_array_equal(batched.gaps, np.zeros(4))
+    for i in range(4):
+        seq = power.mapel(gains[i], w[i], PMAX, NOISE, eps=1e-3)
+        np.testing.assert_array_equal(batched.powers[i], seq.powers)
+        assert batched.weighted_rates[i] == seq.weighted_rate
+
+
+def test_mapel_batched_near_zero_gains_matches_sequential():
+    """Gains at the numerical floor (deep-fade devices, ~1e-12 amplitude):
+    the z targets collapse to ~1 and log2 terms to ~0, the regime where the
+    projection bisections and back-substitutions are most cancellation-
+    prone.  The lockstep driver must still walk the identical float path as
+    the sequential solver — bit-equal powers, rates, iterations, gaps —
+    including rows that MIX a healthy gain with near-dead ones."""
+    rng = np.random.default_rng(13)
+    gains = np.abs(rng.normal(1e-12, 5e-13, (5, 3))) + 1e-15
+    gains[2, 0] = 1e-6            # one healthy device among the dead
+    gains[4] = 1e-15              # a whole row at the floor
+    w = rng.dirichlet(np.ones(3), size=5)
+    batched = power.mapel_batched(gains, w, PMAX, NOISE, eps=1e-3)
+    assert np.all(np.isfinite(batched.powers))
+    assert np.all(batched.powers >= -1e-12)
+    assert np.all(batched.powers <= PMAX * (1 + 1e-9))
+    for i in range(5):
+        seq = power.mapel(gains[i], w[i], PMAX, NOISE, eps=1e-3)
+        np.testing.assert_array_equal(batched.powers[i], seq.powers)
+        assert batched.weighted_rates[i] == seq.weighted_rate
+        assert batched.iterations[i] == seq.iterations
+        assert batched.gaps[i] == seq.gap
+
+
 def test_mapel_gap_reported():
     gains, w = _instance(3, 7)
     sol = power.mapel(gains, w, PMAX, NOISE, eps=1e-3, max_iter=300)
