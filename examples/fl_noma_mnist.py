@@ -79,6 +79,9 @@ Takes ~10-20 min at full scale on this CPU (legacy engine; the batched
 engine cuts the round-loop time severalfold); --fast runs M=60, T=10.
 """
 import argparse
+import contextlib
+import os
+import sys
 
 import numpy as np
 
@@ -125,6 +128,11 @@ def main():
                     help="top-k sparsification cap before DoReFa "
                          "(fraction of coordinates kept; 1.0 = dense; "
                          "batched engine / scan horizon only)")
+    ap.add_argument("--sanitize-nans", action="store_true",
+                    help="run under the flcheck NaN sanitizer "
+                         "(jax_debug_nans): a NaN anywhere in the FL math "
+                         "raises FloatingPointError at the source instead "
+                         "of poisoning the accuracy curve; slow, debug only")
     args = ap.parse_args()
     if args.seeds is not None:
         args.horizon = "scan"
@@ -169,25 +177,37 @@ def main():
           f"{'topk=' + format(args.topk, '.2f') + ' ' if args.topk < 1 else ''}"
           f"mode={'online (live)' if online else 'precomputed'}")
 
-    if args.seeds is not None:
-        sweep = fl.run_horizon_vmapped(
-            ds, shards, cell, cfg,
-            seeds=range(args.seed, args.seed + args.seeds),
-            uplink=args.uplink)
-        finals = np.array([r.accuracies()[-1] for r in sweep])
-        for i, r in enumerate(sweep):
-            print(f"seed {args.seed + i}: final acc "
-                  f"{r.accuracies()[-1]:.3f} "
-                  f"sim time {r.times()[-1]:6.1f}s")
-        print(f"\n{args.seeds} seeds: final acc {finals.mean():.3f} "
-              f"+/- {finals.std():.3f}")
-        return
+    if args.sanitize_nans:
+        # tools/ sits next to src/ at the repo root, not on the examples/
+        # script path argparse launches from
+        sys.path.insert(0, os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        from tools.flcheck.sanitizers import nan_guard
 
-    res = fl.run_federated_learning(
-        ds, shards, cell, cfg, uplink=args.uplink,
-        progress=lambda log: print(
-            f"round {log.round:3d} acc={log.test_accuracy:.3f} "
-            f"bits={log.bits.tolist()} t={log.wall_time_s:6.1f}s"))
+        guard = nan_guard()
+    else:
+        guard = contextlib.nullcontext()
+
+    with guard:
+        if args.seeds is not None:
+            sweep = fl.run_horizon_vmapped(
+                ds, shards, cell, cfg,
+                seeds=range(args.seed, args.seed + args.seeds),
+                uplink=args.uplink)
+            finals = np.array([r.accuracies()[-1] for r in sweep])
+            for i, r in enumerate(sweep):
+                print(f"seed {args.seed + i}: final acc "
+                      f"{r.accuracies()[-1]:.3f} "
+                      f"sim time {r.times()[-1]:6.1f}s")
+            print(f"\n{args.seeds} seeds: final acc {finals.mean():.3f} "
+                  f"+/- {finals.std():.3f}")
+            return
+
+        res = fl.run_federated_learning(
+            ds, shards, cell, cfg, uplink=args.uplink,
+            progress=lambda log: print(
+                f"round {log.round:3d} acc={log.test_accuracy:.3f} "
+                f"bits={log.bits.tolist()} t={log.wall_time_s:6.1f}s"))
     accs = res.accuracies()
     print(f"\nfinal acc {accs[-1]:.3f}; mean-last-5 "
           f"{np.mean(accs[-5:]):.3f}; total sim time {res.times()[-1]:.1f}s")

@@ -239,6 +239,7 @@ class FLConfig:
                 f"group_size must be in [1, num_devices={self.num_devices}], "
                 f"got {self.group_size}"
             )
+        from repro.core import errors
         from repro.core import power as power_lib
         from repro.core import scheduling
 
@@ -274,10 +275,7 @@ class FLConfig:
             # cannot feed update norms / participation back into the policy
             # mid-program, so the run would silently be a different policy.
             raise ValueError(
-                f"horizon='scan' cannot drive online policy "
-                f"{self.scheduler!r}: online policies select from live FL "
-                f"state fed back by the host loop each round; use "
-                f"horizon='per-round'"
+                errors.ERR_SCAN_ONLINE_POLICY.format(scheduler=self.scheduler)
             )
         if not 0.0 < self.eval_sample <= 1.0:
             raise ValueError(

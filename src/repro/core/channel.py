@@ -89,7 +89,9 @@ def sample_round_channels(
 ) -> jax.Array:
     """Channel gains for every round: (T, M). Block fading across rounds."""
     keys = jax.random.split(key, num_rounds)
-    return jax.vmap(lambda k: sample_channel_gains(k, distances_m, cfg))(keys)
+    return jax.vmap(sample_channel_gains, in_axes=(0, None, None))(
+        keys, distances_m, cfg
+    )
 
 
 def downlink_time_seconds(

@@ -1,0 +1,61 @@
+"""Pinned error-message constants shared across config validation and drivers.
+
+Several ValueError messages in this repo are *pinned*: tests match on their
+text (``pytest.raises(match=...)``) and more than one module raises them —
+``FLConfig.__post_init__`` validates at construction, ``ota.check_uplink``
+re-validates call-site uplink overrides inside every fl.py driver, and
+``fl._horizon_setup`` guards direct ``run_horizon_scanned`` calls.  Before
+this module each site carried its own literal copy, so a wording tweak in
+one place silently desynchronized the others (the FLConfig /
+``ota.check_uplink`` drift hazard).
+
+The single source of truth lives here as ``.format()`` templates.  The
+``flcheck`` static-analysis pass (rule FLC006, ``tools/flcheck``) enforces
+centralization: a ``raise ValueError`` whose literal duplicates one of
+these messages anywhere outside this module is a lint error — new call
+sites must import the constant.
+
+Adding a message: define an UPPER_CASE ``str`` constant (optionally with
+``{field}`` / ``{field!r}`` placeholders).  flcheck parses this file with
+``ast`` only (never imports it) and derives each constant's longest
+placeholder-free fragment as the duplication signature, so no registration
+step is needed.
+"""
+from __future__ import annotations
+
+# --- uplink-combination rules (ota.check_uplink; FLConfig re-raises) -------
+
+ERR_UNKNOWN_UPLINK = "unknown uplink {uplink!r}; known: {modes}"
+
+ERR_OTA_TOPK = (
+    "uplink='ota' cannot apply top-k sparsification: analog "
+    "superposition transmits the raw update vector over the "
+    "air, never a per-device coded payload; set topk=1.0"
+)
+
+ERR_OTA_COMPRESSION = (
+    "uplink='ota' requires compression='none': the PS receives "
+    "the noisy analog sum and never decodes per-device "
+    "payloads, so DoReFa quantization cannot apply"
+)
+
+ERR_OTA_MAPEL = (
+    "uplink='ota' cannot use power_mode='mapel': MAPEL "
+    "optimizes SIC decode rates, which analog superposition "
+    "never performs; use power_mode='max' or 'ota-align'"
+)
+
+ERR_OTA_ALIGN_UPLINK = (
+    "power_mode='ota-align' requires uplink='ota': alignment "
+    "powers implement truncated channel inversion for the analog "
+    "sum and have no digital-uplink meaning"
+)
+
+# --- horizon / policy coherence (FLConfig + fl._horizon_setup) -------------
+
+ERR_SCAN_ONLINE_POLICY = (
+    "horizon='scan' cannot drive online policy "
+    "{scheduler!r}: online policies select from live FL "
+    "state fed back by the host loop each round; use "
+    "horizon='per-round'"
+)

@@ -62,7 +62,7 @@ import numpy as np
 
 from repro.config import FLConfig
 from repro.core import channel as chan
-from repro.core import compression, fl_engine, noma, scheduling
+from repro.core import compression, errors, fl_engine, noma, scheduling
 from repro.core import ota as ota_lib
 from repro.core import power as power_lib
 from repro.core import quantization as qlib
@@ -532,10 +532,7 @@ def _horizon_setup(dataset, shards, cell, cfg: FLConfig, uplink, schedule):
             # FLConfig already rejects horizon="scan" + online policies;
             # guard direct run_horizon_scanned calls with the same message.
             raise ValueError(
-                f"horizon='scan' cannot drive online policy "
-                f"{cfg.scheduler!r}: online policies select from live FL "
-                f"state fed back by the host loop each round; use "
-                f"horizon='per-round'"
+                errors.ERR_SCAN_ONLINE_POLICY.format(scheduler=cfg.scheduler)
             )
         schedule = make_schedule(gains, weights, cell, cfg, policy=policy)
     else:
@@ -621,8 +618,13 @@ def _stack_plans(plans, bank, num_rounds):
     shape for every instance — the padding batches contribute exactly-zero
     gradients).
     """
+    # stack on the host: jnp.stack compiles one concatenate program per
+    # leaf shape AND per sweep width, so the XLA program count would vary
+    # with the number of instances (the compile-count sanitizer tests pin
+    # it constant); np.stack + device_put is a pure transfer
     params_s = jax.tree_util.tree_map(
-        lambda *ls: jnp.stack(ls), *[p.params0 for p in plans]
+        lambda *ls: jnp.asarray(np.stack([np.asarray(l) for l in ls])),
+        *[p.params0 for p in plans]
     )
     dev = np.stack([p.dev_tk for p in plans])
     bud = np.stack([p.budgets_tk for p in plans])
@@ -802,9 +804,13 @@ def run_horizon_vmapped(
     )
     bits_np, accs_np = np.asarray(bits_stk), np.asarray(accs_st)
     kept_np = np.asarray(kept_stk)
+    # unstack on the host for the same reason _stack_plans stacks there:
+    # a traced l[s] compiles one dynamic_slice program per leaf shape per
+    # sweep width, making the program count depend on the seed count
+    final_np = jax.tree_util.tree_map(np.asarray, final_s)
     results = []
     for s, plan in enumerate(plans):
-        fp = jax.tree_util.tree_map(lambda l, s=s: l[s], final_s)
+        fp = jax.tree_util.tree_map(lambda l, s=s: jnp.asarray(l[s]), final_np)
         results.append(_assemble_horizon_result(
             plan, dataclasses.replace(cfg, seed=seeds[s]), uplink, eval_mask,
             bits_np[s], accs_np[s], fp, kept_tk=kept_np[s],

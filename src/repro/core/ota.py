@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import errors
+
 UPLINK_MODES = ("noma", "tdma", "ota")
 # fl.run_federated_learning uplink modes; FLConfig validates ``uplink``
 # against this tuple ("noma"/"tdma" are the paper's digital §IV uplinks,
@@ -65,33 +67,17 @@ def check_uplink(uplink: str, *, compression: str, topk: float,
     messages on incoherent combos."""
     if uplink not in UPLINK_MODES:
         raise ValueError(
-            f"unknown uplink {uplink!r}; known: {UPLINK_MODES}"
+            errors.ERR_UNKNOWN_UPLINK.format(uplink=uplink, modes=UPLINK_MODES)
         )
     if uplink == "ota":
         if topk < 1.0:
-            raise ValueError(
-                "uplink='ota' cannot apply top-k sparsification: analog "
-                "superposition transmits the raw update vector over the "
-                "air, never a per-device coded payload; set topk=1.0"
-            )
+            raise ValueError(errors.ERR_OTA_TOPK)
         if compression != "none":
-            raise ValueError(
-                "uplink='ota' requires compression='none': the PS receives "
-                "the noisy analog sum and never decodes per-device "
-                "payloads, so DoReFa quantization cannot apply"
-            )
+            raise ValueError(errors.ERR_OTA_COMPRESSION)
         if power_mode == "mapel":
-            raise ValueError(
-                "uplink='ota' cannot use power_mode='mapel': MAPEL "
-                "optimizes SIC decode rates, which analog superposition "
-                "never performs; use power_mode='max' or 'ota-align'"
-            )
+            raise ValueError(errors.ERR_OTA_MAPEL)
     elif power_mode == "ota-align":
-        raise ValueError(
-            "power_mode='ota-align' requires uplink='ota': alignment "
-            "powers implement truncated channel inversion for the analog "
-            "sum and have no digital-uplink meaning"
-        )
+        raise ValueError(errors.ERR_OTA_ALIGN_UPLINK)
 
 
 def horizon_keys(seed: int, num_rounds: int) -> np.ndarray:

@@ -1,0 +1,86 @@
+"""Cross-process determinism: PYTHONHASHSEED must not leak into FL state.
+
+The PR 8 bug class: builtin ``hash()`` is salted per process, so any seed,
+PRNG fold or registry ordering derived from it silently differs between
+two runs of the *same* config — invalidating every cross-run scheduling /
+accuracy comparison the paper makes.  flcheck's FLC002 bans the construct
+statically; these tests pin the end-to-end invariant by digesting model
+init and the schedule plan in subprocesses launched with *different*
+``PYTHONHASHSEED`` values and requiring identical digests.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = r"""
+import hashlib, json
+import numpy as np
+import jax
+from repro.config import FLConfig
+from repro.core import channel, fl, scheduling
+from repro.data import dirichlet_partition, make_mnist_like
+from repro.models.fl_models import get_fl_model
+
+out = {}
+
+# per-leaf init folds (models/params.py) across registry model kinds
+for name in ("lenet", "tiny-transformer"):
+    params = get_fl_model(name).init(jax.random.PRNGKey(0))
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(params):
+        h.update(np.asarray(leaf, np.float32).tobytes())
+    out[name] = h.hexdigest()
+
+# schedule plan: lazy-gwmin (MWIS host planning) + random (own PRNG stream)
+M = 8
+ds = make_mnist_like(num_samples=200, seed=0)
+cell = channel.CellConfig(num_devices=M)
+dist = channel.sample_positions(jax.random.PRNGKey(0), cell)
+gains = np.asarray(channel.sample_round_channels(
+    jax.random.PRNGKey(1), dist, cell, 3))
+weights = np.full(M, 1.0 / M)
+for sched in ("lazy-gwmin", "random"):
+    cfg = FLConfig(num_devices=M, group_size=2, num_rounds=3,
+                   scheduler=sched, power_mode="max",
+                   compression="adaptive", fl_engine="batched", seed=0)
+    plan = fl.make_schedule(gains, weights, cell, cfg)
+    h = hashlib.sha256()
+    for g in plan.rounds:
+        h.update(np.asarray(g, np.int64).tobytes())
+    for p in plan.powers:
+        h.update(np.asarray(p, np.float64).tobytes())
+    out[sched] = h.hexdigest()
+
+print("DIGESTS " + json.dumps(out))
+"""
+
+
+def _digests(hashseed: int) -> dict:
+    env = dict(
+        os.environ,
+        PYTHONHASHSEED=str(hashseed),
+        PYTHONPATH=os.path.join(REPO, "src"),
+    )
+    res = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    for line in res.stdout.splitlines():
+        if line.startswith("DIGESTS "):
+            return json.loads(line[len("DIGESTS "):])
+    pytest.fail(f"no digest line in subprocess output: {res.stdout[-500:]}")
+
+
+def test_init_and_schedule_digests_hashseed_invariant():
+    a, b = _digests(0), _digests(1)
+    assert set(a) == {"lenet", "tiny-transformer", "lazy-gwmin", "random"}
+    assert a == b, (
+        "PYTHONHASHSEED leaked into model init or scheduling: "
+        f"{[k for k in a if a[k] != b[k]]}"
+    )

@@ -61,7 +61,7 @@ def test_chunked_attention_q_offset_decode():
     v = jax.random.normal(jax.random.fold_in(key, 2), (b, smax, hkv, d))
     got = L.chunked_attention(
         q, k, v, mask_spec=L.AttnMaskSpec(causal=True), q_offset=off,
-        kv_chunk=8, kv_valid_len=jnp.asarray(off + 1))
+        kv_chunk=8, kv_valid_len=jnp.asarray(off + 1, jnp.int32))
     # oracle: attend over exactly the first off+1 keys
     want = naive_attention(q, k[:, : off + 1], v[:, : off + 1],
                            jnp.ones((1, off + 1), bool))

@@ -1,0 +1,12 @@
+"""flcheck — trace-safety & determinism static analysis for this repo.
+
+``python -m tools.flcheck src tests benchmarks examples`` runs the pass;
+``python -m tools.flcheck --selftest`` checks the rule corpus.  The checker
+half (:mod:`tools.flcheck.checker`) is stdlib-only; the runtime half
+(:mod:`tools.flcheck.sanitizers` — compile-count guard, NaN sanitizer)
+imports JAX and is pulled in only by the code that uses it.
+"""
+from tools.flcheck.checker import (  # noqa: F401
+    RULES, Diagnostic, check_file, check_paths, find_errors_module,
+    pinned_fragments,
+)

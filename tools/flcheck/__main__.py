@@ -1,0 +1,66 @@
+"""CLI: ``python -m tools.flcheck [paths ...]``.
+
+Exit status 0 when no (non-suppressed) diagnostic fires, 1 otherwise —
+the CI ``flcheck`` job gates on it.  ``--selftest`` runs the rule corpus
+(every FLC rule must fire on its positive snippets and stay silent on the
+negatives) and is wired into the same CI step.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.flcheck.checker import (
+    RULES, check_paths, find_errors_module, pinned_fragments,
+)
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.flcheck",
+        description="trace-safety & determinism lint (stdlib ast only)",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to scan (default: {DEFAULT_PATHS})")
+    ap.add_argument("--errors", default=None,
+                    help="path to the pinned-message constants module "
+                         "(default: <search>/repro/core/errors.py)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the per-rule positive/negative corpus")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, msg in sorted(RULES.items()):
+            print(f"{rule}  {msg}")
+        return 0
+
+    if args.selftest:
+        from tools.flcheck.selftest import run_selftest
+
+        failures = run_selftest()
+        if failures:
+            for f in failures:
+                print(f, file=sys.stderr)
+            print(f"flcheck selftest: {len(failures)} FAILED",
+                  file=sys.stderr)
+            return 1
+        print("flcheck selftest: all rules PASS")
+        return 0
+
+    paths = args.paths or list(DEFAULT_PATHS)
+    errors_path = args.errors or find_errors_module(["src", *paths, "."])
+    fragments = pinned_fragments(errors_path) if errors_path else {}
+    diags = check_paths(paths, fragments=fragments)
+    for d in diags:
+        print(d)
+    if diags:
+        print(f"flcheck: {len(diags)} diagnostic(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""FLC001 corpus: jit/vmap of a bound method or local lambda at call time.
+
+The PR 7 bug: ``jax.jit(model.accuracy)`` inside the eval path built a
+fresh bound-method object every call, so the jit cache missed every round
+(2.2x slowdown on the legacy cell sweep).  Never executed — parsed only.
+"""
+import jax
+
+from repro.models import lenet
+
+
+def bad_bound_method(model, params, xb, yb):
+    acc_fn = jax.jit(model.accuracy)  # expect: FLC001
+    return acc_fn(params, xb, yb)
+
+
+def bad_vmapped_bound_method(engine, states):
+    return jax.vmap(engine.step)(states)  # expect: FLC001
+
+
+def bad_local_lambda(coeff, chunks):
+    f = jax.jit(lambda c: c * coeff)  # expect: FLC001
+    return f(chunks)
+
+
+def good_module_function(params, xb, yb):
+    # module attribute (resolved against the filesystem): stable identity,
+    # the jit cache hits on every call
+    acc_fn = jax.jit(lenet.accuracy)
+    return acc_fn(params, xb, yb)
+
+
+def good_factory_call(model):
+    # first argument is a call result, not a bound-method Attribute;
+    # hoisting decisions are the factory's problem, not a per-call miss
+    return jax.jit(make_step(model), static_argnames=("nb",))
+
+
+def make_step(model):
+    def step(params, batch, nb):
+        return model.loss(params, batch), nb
+    return step

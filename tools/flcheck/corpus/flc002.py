@@ -1,0 +1,24 @@
+"""FLC002 corpus: builtin hash()/id() in seed / registry paths.
+
+The PR 8 bug: ``hash(keystr(path))`` folded into per-leaf init seeds is
+salted by PYTHONHASHSEED, so model init differed across processes.  Fixed
+with ``zlib.crc32`` of a stable encoding.  Never executed — parsed only.
+"""
+import zlib
+
+
+def bad_seed_from_hash(path_str, base_seed):
+    return base_seed + hash(path_str) % (2 ** 31)  # expect: FLC002
+
+
+def bad_registry_key(obj):
+    return id(obj)  # expect: FLC002
+
+
+def good_crc32_fold(path_str, base_seed):
+    return base_seed + zlib.crc32(path_str.encode()) % (2 ** 31)
+
+
+def good_suppressed(path_str):
+    # a deliberate, reviewed use keeps working under suppression
+    return hash(path_str)  # flcheck: disable=FLC002

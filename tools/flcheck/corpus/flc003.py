@@ -1,0 +1,45 @@
+"""FLC003 corpus: host sync on traced values inside jit-reachable code.
+
+``float()`` / ``.item()`` / ``np.asarray`` on a traced value forces a
+device sync and fails under ``lax.scan`` / ``jit`` tracing; the rule only
+fires when the enclosing function is reachable from a jit root through
+the lightweight call graph.  Never executed — parsed only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_float_in_jit(x):
+    s = jnp.sum(x)
+    return float(s)  # expect: FLC003
+
+
+@jax.jit
+def bad_item_in_jit(x):
+    return jnp.max(x).item()  # expect: FLC003
+
+
+def _helper(x):
+    m = jnp.mean(x)
+    return np.asarray(m)  # expect: FLC003
+
+
+@jax.jit
+def bad_reachable_helper(x):
+    # _helper is not decorated, but it is reachable from this jit root,
+    # so its np.asarray on a traced value fires
+    return _helper(x)
+
+
+def good_static_shape(x):
+    # shape/len access is a host int even under tracing
+    n = int(x.shape[0])
+    return jnp.zeros(n)
+
+
+def good_host_only(x):
+    # identical construct, but never reachable from a jit root
+    s = jnp.sum(x)
+    return float(s)

@@ -1,0 +1,27 @@
+"""FLC004 corpus: Python int arithmetic crossing jnp without a dtype.
+
+The PR 7 bug: payload accounting at 10^8 params * 32 bits overflowed the
+default int32 when the host int crossed into jnp.  Never executed —
+parsed only.
+"""
+import jax.numpy as jnp
+
+NUM_PARAMS = 10 ** 8
+
+
+def bad_payload_bits(bits_per_param):
+    return jnp.asarray(NUM_PARAMS * bits_per_param)  # expect: FLC004
+
+
+def good_explicit_dtype(bits_per_param):
+    return jnp.asarray(NUM_PARAMS * bits_per_param, dtype=jnp.float64)
+
+
+def good_shape_derived(x):
+    # shape products are bounded by the array's element count
+    return jnp.asarray(x.shape[0] * x.shape[1])
+
+
+def good_plain_value(n):
+    # no arithmetic at the boundary: nothing to overflow mid-expression
+    return jnp.asarray(n)

@@ -1,0 +1,30 @@
+"""FLC005 corpus: catastrophic cancellation — log(1+x) / 1-exp(x).
+
+The PR 5 bug: f32 ``log(1 + x)`` underflowed for tiny downlink SNR and
+poisoned the Fig. 5 time axis; ``log1p`` / ``expm1`` keep full precision
+for small |x|.  ``log2(1 + SINR)`` is deliberately NOT matched — that is
+the Shannon rate formula, bit-pinned across the scheduler tests.  Never
+executed — parsed only.
+"""
+import jax.numpy as jnp
+
+
+def bad_log_one_plus(snr):
+    return jnp.log(1.0 + snr)  # expect: FLC005
+
+
+def bad_one_minus_exp(t):
+    return 1.0 - jnp.exp(-t)  # expect: FLC005
+
+
+def good_log1p_expm1(snr, t):
+    return jnp.log1p(snr) - jnp.expm1(-t)
+
+
+def good_shannon_rate(sinr):
+    # base-2 log of (1 + SINR) is the rate formula, not a precision bug
+    return jnp.log2(1.0 + sinr)
+
+
+def good_offset_not_one(x):
+    return jnp.log(2.0 + x)

@@ -1,0 +1,27 @@
+"""FLC006 corpus: pinned error messages must come from repro.core.errors.
+
+Tests match on these messages (``pytest.raises(match=...)``) and several
+modules raise them; a literal copy outside the constants module drifts
+silently.  The duplication signatures are derived from the real
+``src/repro/core/errors.py`` by parsing it.  Never executed — parsed only.
+"""
+from repro.core import errors
+
+
+def bad_duplicated_literal(compression):
+    if compression != "none":
+        raise ValueError(  # expect: FLC006
+            "uplink='ota' requires compression='none': the PS receives "
+            "the noisy analog sum and never decodes per-device "
+            "payloads, so DoReFa quantization cannot apply"
+        )
+
+
+def good_imported_constant(compression):
+    if compression != "none":
+        raise ValueError(errors.ERR_OTA_COMPRESSION)
+
+
+def good_unpinned_message(x):
+    if x < 0:
+        raise ValueError(f"x must be non-negative, got {x}")

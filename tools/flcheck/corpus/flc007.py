@@ -1,0 +1,19 @@
+"""FLC007 corpus: optional deps must go through the ImportError shim.
+
+The offline CI container ships neither ``hypothesis`` nor ``zstandard``;
+a bare import crashes collection instead of degrading gracefully.  Never
+executed — parsed only.
+"""
+import hypothesis  # expect: FLC007
+from zstandard import ZstdCompressor  # expect: FLC007
+
+try:
+    import zstandard
+except ImportError:  # the established shim: degrade to None
+    zstandard = None
+
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False

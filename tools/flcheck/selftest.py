@@ -1,0 +1,79 @@
+"""Self-test corpus runner.
+
+Each ``corpus/flcNNN.py`` file carries minimal positive and negative
+snippets for one rule.  Positive lines end with ``# expect: FLCxxx``
+(comma-separated for several rules on one line); every other line must
+stay silent.  ``run_selftest`` checks the *exact* set of (line, rule)
+diagnostics per file against the markers — a rule that under-fires
+(missed positive) or over-fires (phantom on a negative) both fail.
+
+FLC006 needs the pinned-message fragments, which are derived from the
+real ``src/repro/core/errors.py`` next to this checkout.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+from tools.flcheck.checker import (
+    RULES, check_paths, find_errors_module, pinned_fragments,
+)
+
+_CORPUS = os.path.join(os.path.dirname(__file__), "corpus")
+_EXPECT_RE = re.compile(r"#\s*expect:\s*(?P<rules>FLC[0-9]{3}(?:\s*,\s*FLC[0-9]{3})*)")
+
+
+def _expected(path: str) -> set:
+    out = set()
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, start=1):
+            m = _EXPECT_RE.search(line)
+            if m:
+                for rule in m.group("rules").split(","):
+                    out.add((lineno, rule.strip()))
+    return out
+
+
+def run_selftest(corpus_dir: str = _CORPUS) -> list:
+    """Returns a list of human-readable failure strings (empty == pass)."""
+    repo_root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    errors_path = find_errors_module([os.path.join(repo_root, "src"), "src"])
+    fragments = pinned_fragments(errors_path) if errors_path else {}
+
+    failures: list = []
+    files = sorted(
+        os.path.join(corpus_dir, f)
+        for f in os.listdir(corpus_dir)
+        if f.endswith(".py") and f != "__init__.py"
+    )
+    if not files:
+        return [f"selftest: empty corpus at {corpus_dir}"]
+
+    covered = set()
+    for path in files:
+        expected = _expected(path)
+        actual = {
+            (d.line, d.rule)
+            for d in check_paths(
+                [path],
+                search_dirs=(os.path.join(repo_root, "src"), "src", "."),
+                fragments=fragments,
+            )
+        }
+        covered |= {r for _, r in expected}
+        for line, rule in sorted(expected - actual):
+            failures.append(
+                f"{path}:{line} expected {rule} but the checker was silent"
+            )
+        for line, rule in sorted(actual - expected):
+            failures.append(
+                f"{path}:{line} unexpected {rule} (negative snippet fired)"
+            )
+
+    missing = sorted(set(RULES) - covered)
+    if missing:
+        failures.append(
+            f"corpus has no positive snippet for: {', '.join(missing)}"
+        )
+    return failures
