@@ -19,9 +19,10 @@ records that are persisted at the repo root (``BENCH_scheduling.json``: M
 sweep x numpy/jax scheduler backend; ``BENCH_fl.json``: K x M round-loop
 sweep, legacy vs batched FL engine; ``BENCH_cells.json``: cells x seeds x M
 sweep, scanned grid vs sequential per-round dispatch;
-``BENCH_payload.json``: transformer-class payload-size sweep, chunked
-Pallas aggregation vs XLA einsum) so the perf trajectories are tracked
-from PR to PR.
+``BENCH_policy.json``: online-policy horizons, traced scan vs per-round
+host loop; ``BENCH_payload.json``: transformer-class payload-size sweep,
+chunked Pallas aggregation vs XLA einsum) so the perf trajectories are
+tracked from PR to PR.
 """
 from __future__ import annotations
 
@@ -40,6 +41,7 @@ SUITES = [
     ("compression", "benchmarks.compression_stats"),  # §II-B adaptive bits
     ("fl_engine", "benchmarks.fl_bench"),          # legacy vs batched round loop
     ("fl_cells", "benchmarks.fl_bench:cells_main"),  # scanned cells x seeds sweep
+    ("policy", "benchmarks.policy_bench"),         # online-policy traced scan
     ("payload", "benchmarks.payload_bench"),       # LLM-scale aggregation
     ("ota", "benchmarks.ota_bench"),               # analog vs digital uplink
     ("fig5", "benchmarks.fig5_noma_vs_tdma"),      # Fig. 5
@@ -60,6 +62,7 @@ PERSIST = {
     "scheduling": "BENCH_scheduling",
     "fl_engine": "BENCH_fl",
     "fl_cells": "BENCH_cells",
+    "policy": "BENCH_policy",
     "payload": "BENCH_payload",
     "ota": "BENCH_ota",
 }
@@ -73,6 +76,8 @@ REGRESSION_METRICS = {
     "fl_engine": ("legacy_s_per_round", "batched_s_per_round"),
     "fl_cells": ("scan_sweep_s", "per_round_legacy_sweep_s",
                  "per_round_batched_sweep_s"),
+    "policy": ("scan_horizon_s", "per_round_legacy_horizon_s",
+               "per_round_batched_horizon_s"),
     "payload": ("einsum_s", "pallas_chunked_s"),
     "ota": ("horizon_s",),
 }

@@ -41,11 +41,20 @@ BENCH_fl.json) and equal to the legacy loop to f32 tolerance;
 fused dequant+aggregate Pallas kernel instead of the XLA einsum
 (interpret mode on CPU, Mosaic on TPU).
 
-``--horizon scan`` (``FLConfig.horizon``) runs the whole precomputed
-horizon as ONE ``lax.scan`` device program instead of dispatching round
-by round — identical schedules/bits/rates/times, bit-identical
-accuracies (tests/test_fl_scan.py); precomputed policies only, online
-policies are rejected at config time.  ``--seeds N`` additionally sweeps
+``--horizon scan`` (``FLConfig.horizon``) runs the whole horizon as ONE
+``lax.scan`` device program instead of dispatching round by round —
+identical schedules/bits/rates/times, bit-identical accuracies
+(tests/test_fl_scan.py).  Online policies run under the scan too, via the
+traced selection protocol (tests/test_policy_scan.py; BENCH_policy.json
+tracks the speedup) — selection, power allocation and budget pricing all
+execute inside the scan body, e.g.::
+
+    PYTHONPATH=src python examples/fl_noma_mnist.py --fast \
+        --horizon scan --scheduler update-aware
+
+(the driver then defaults ``--power`` to ``max``: MAPEL's host-iterative
+polyblock search cannot run inside the traced round body).
+``--seeds N`` additionally sweeps
 N independent seeds (model init + channel draws + schedule each) through
 ``fl.run_horizon_vmapped`` — one vmapped program for the whole sweep —
 and reports the mean/std final accuracy; it implies ``--horizon scan``.
@@ -100,7 +109,10 @@ def main():
     ap.add_argument("--power", default=None,
                     help="power mode (default mapel; ota uplink defaults "
                          "to max — MAPEL optimizes SIC decode rates the "
-                         "analog sum never performs)")
+                         "analog sum never performs — as does an online "
+                         "scheduler under --horizon scan, whose traced "
+                         "round body cannot run the host-iterative "
+                         "polyblock search)")
     ap.add_argument("--uplink", default="noma", choices=ota.UPLINK_MODES)
     ap.add_argument("--ota-noise", type=float, default=0.0,
                     help="OTA receiver noise std (uplink=ota; 0 = exact "
@@ -114,8 +126,9 @@ def main():
                     help="batched engine: aggregate via the Pallas kernel")
     ap.add_argument("--horizon", default="per-round",
                     choices=["per-round", "scan"],
-                    help="scan: whole precomputed horizon as one lax.scan "
-                         "program (no online policies)")
+                    help="scan: whole horizon as one lax.scan program "
+                         "(precomputed schedules, and online policies via "
+                         "the traced selection protocol)")
     ap.add_argument("--seeds", type=int, default=None,
                     help="sweep N seeds through one vmapped scan program "
                          "(implies --horizon scan)")
@@ -137,7 +150,10 @@ def main():
     if args.seeds is not None:
         args.horizon = "scan"
     if args.power is None:
-        args.power = "max" if args.uplink == "ota" else "mapel"
+        online_scan = (args.horizon == "scan"
+                       and scheduling.policy_is_online(args.scheduler))
+        args.power = ("max" if args.uplink == "ota" or online_scan
+                      else "mapel")
 
     m = 60 if args.fast else 300              # paper: M = 300
     t = args.rounds or (10 if args.fast else 35)  # paper: T = 35

@@ -178,11 +178,14 @@ class FLConfig:
     use_pallas: bool = False         # batched engine only: aggregate through
                                      # the fused dequant+aggregate Pallas
                                      # kernel instead of the XLA einsum
-    horizon: str = "per-round"       # per-round (host round loop; the only
-                                     # mode online policies can run under) |
-                                     # scan (precomputed-schedule horizon as
-                                     # ONE lax.scan device program; vmappable
-                                     # over seeds, shardable over a cell mesh)
+    horizon: str = "per-round"       # per-round (host round loop) | scan
+                                     # (the whole horizon as ONE lax.scan
+                                     # device program; vmappable over seeds,
+                                     # shardable over a cell mesh. Accepts
+                                     # precomputed schedules and online
+                                     # policies with the traced protocol —
+                                     # selection/power/budgets then run
+                                     # inside the scan body)
     eval_sample: float = 1.0         # fraction of the test set evaluated per
                                      # round via the EvalBank gather (batched
                                      # engine + scan horizon); 1.0 = full
@@ -271,12 +274,25 @@ class FLConfig:
                 f"known: {fl_engine.HORIZON_MODES}"
             )
         if self.horizon == "scan" and scheduling.policy_is_online(self.scheduler):
-            # No silent fallback to the per-round driver: a scan horizon
-            # cannot feed update norms / participation back into the policy
-            # mid-program, so the run would silently be a different policy.
-            raise ValueError(
-                errors.ERR_SCAN_ONLINE_POLICY.format(scheduler=self.scheduler)
-            )
+            # Online policies run device-resident under the scan iff they
+            # implement the traced selection protocol (the feedback loop
+            # then lives inside the scan carry).  No silent fallback to
+            # the per-round driver for the rest: the run would silently
+            # be a different policy.
+            if not scheduling.policy_is_traced(self.scheduler):
+                raise ValueError(
+                    errors.ERR_SCAN_ONLINE_POLICY.format(
+                        scheduler=self.scheduler
+                    )
+                )
+            if self.power_mode == "mapel":
+                # the polyblock power search is host-iterative: it cannot
+                # run inside the traced round body
+                raise ValueError(
+                    errors.ERR_SCAN_ONLINE_MAPEL.format(
+                        scheduler=self.scheduler
+                    )
+                )
         if not 0.0 < self.eval_sample <= 1.0:
             raise ValueError(
                 f"eval_sample must be in (0, 1], got {self.eval_sample}"

@@ -55,7 +55,16 @@ ERR_OTA_ALIGN_UPLINK = (
 
 ERR_SCAN_ONLINE_POLICY = (
     "horizon='scan' cannot drive online policy "
-    "{scheduler!r}: online policies select from live FL "
-    "state fed back by the host loop each round; use "
-    "horizon='per-round'"
+    "{scheduler!r}: it does not implement the traced selection "
+    "protocol (scheduling.SchedulerPolicy: traced_protocol = True "
+    "+ init_traced/select_round_traced), so its FL-state feedback "
+    "needs the host round loop; use horizon='per-round' or add "
+    "the traced protocol"
+)
+
+ERR_SCAN_ONLINE_MAPEL = (
+    "horizon='scan' with online policy {scheduler!r} cannot use "
+    "power_mode='mapel': the polyblock search is host-iterative "
+    "and cannot run inside the traced round body; use "
+    "power_mode='max' (or 'ota-align' under uplink='ota')"
 )

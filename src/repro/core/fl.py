@@ -319,9 +319,10 @@ def run_federated_learning(
     decode-and-average.
 
     ``cfg.horizon = "scan"`` delegates to :func:`run_horizon_scanned`
-    (the whole precomputed-schedule horizon as one device program —
-    config validation already rejected online policies); this host loop
-    is the per-round driver online policies and oracle comparisons live in.
+    (the whole horizon as one device program — precomputed schedules and
+    traced-protocol online policies alike; config validation already
+    rejected the online policies that cannot trace); this host loop is
+    the per-round driver every scanned path is equality-pinned against.
     """
     uplink = cfg.uplink if uplink is None else uplink
     ota_lib.check_uplink(
@@ -529,8 +530,11 @@ def _horizon_setup(dataset, shards, cell, cfg: FLConfig, uplink, schedule):
     if schedule is None:
         policy = scheduling.get_policy(cfg.scheduler)
         if getattr(policy, "online", False):
-            # FLConfig already rejects horizon="scan" + online policies;
-            # guard direct run_horizon_scanned calls with the same message.
+            # Traced-protocol online policies are routed to the online
+            # driver before this setup runs (run_horizon_scanned); any
+            # online policy reaching a *precomputed* setup lacks that
+            # protocol — guard direct calls with the pinned message
+            # FLConfig raises at construction.
             raise ValueError(
                 errors.ERR_SCAN_ONLINE_POLICY.format(scheduler=cfg.scheduler)
             )
@@ -701,23 +705,42 @@ def run_horizon_scanned(
     eval_every: int = 1,
     progress: Optional[Callable[[RoundLog], None]] = None,
 ) -> FLResult:
-    """One precomputed-schedule horizon as ONE device program.
+    """One whole horizon as ONE device program.
 
-    The tentpole driver behind ``cfg.horizon = "scan"``: all host work
-    (schedule, rates, budgets, weights, timing) happens up front in
-    :func:`_horizon_setup`; training + quantization + aggregation + eval
-    for all T rounds then run as a single ``lax.scan`` dispatch
-    (:func:`fl_engine.run_horizon`).  Same logs as the per-round driver —
+    The tentpole driver behind ``cfg.horizon = "scan"``.  For precomputed
+    schedules all host work (schedule, rates, budgets, weights, timing)
+    happens up front in :func:`_horizon_setup`; training + quantization +
+    aggregation + eval for all T rounds then run as a single ``lax.scan``
+    dispatch (:func:`fl_engine.run_horizon`).  Online policies with the
+    traced protocol route to :func:`_run_horizon_online` instead, which
+    folds selection / power allocation / budget math into the same scan
+    (one host sync per horizon).  Same logs as the per-round driver —
     identical schedules/bits/rates/times, f32-tolerance accuracies — which
     ``tests/test_fl_scan.py`` pins across the uplink x compression x
     policy grid (tests/test_ota.py adds the OTA row, where even the
-    accuracies are bit-identical: both drivers feed the same noise keys).
+    accuracies are bit-identical: both drivers feed the same noise keys;
+    tests/test_policy_scan.py adds the online-policy grid).
     """
     uplink = cfg.uplink if uplink is None else uplink
     ota_lib.check_uplink(
         uplink, compression=cfg.compression, topk=cfg.topk,
         power_mode=cfg.power_mode,
     )
+    if (
+        schedule is None
+        and scheduling.policy_is_online(cfg.scheduler)
+        and scheduling.policy_is_traced(cfg.scheduler)
+    ):
+        if cfg.power_mode == "mapel":
+            # mirror the FLConfig gate for direct calls: the polyblock
+            # search is host-iterative and cannot run inside the scan
+            raise ValueError(
+                errors.ERR_SCAN_ONLINE_MAPEL.format(scheduler=cfg.scheduler)
+            )
+        return _run_horizon_online(
+            dataset, shards, cell, cfg, uplink=uplink,
+            eval_every=eval_every, progress=progress,
+        )
     plan = _horizon_setup(dataset, shards, cell, cfg, uplink, schedule)
     bank = ClientBank.build(
         dataset.x_train, dataset.y_train, shards, cfg.batch_size
@@ -749,6 +772,389 @@ def run_horizon_scanned(
     )
 
 
+# --------------------------------------------------------------------------
+# Online-policy scanned horizons (the traced protocol's host driver)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _OnlinePlan:
+    """Host precompute for one *online-policy* scanned instance.
+
+    Unlike :class:`_HorizonPlan` there is no schedule to pack — selection
+    happens inside the device program — so the plan carries the raw
+    physics the traced policy and the post-sync log reconstruction both
+    consume: the full (T, M) channel table, the data weights/sizes, and
+    the policy's host aux (the f32 solo-rate table from ``init_traced``).
+    """
+
+    params0: dict                # freshly initialized model
+    payload: int                 # I: full-precision payload bits
+    gains: np.ndarray            # (T, M) float64 channel amplitudes
+    weights: np.ndarray          # (M,) float64 data weights
+    sizes: np.ndarray            # (M,) float64 shard sizes
+    solo: np.ndarray             # (T, M) float32 policy aux (init_traced)
+    noise_keys: np.ndarray       # (T, 2) uint32 OTA receiver-noise keys
+    dl_time: float               # downlink broadcast seconds per round
+    eval_idx: "np.ndarray | None"  # (T, n) eval sample plan; None = full set
+
+
+def _traced_policy_config(cell, cfg: FLConfig) -> scheduling.PolicyConfig:
+    """The PolicyConfig passed as a *static* jit argument to the online
+    horizon programs: the fields no traced policy reads (seed, host
+    scheduler backend) are pinned so program identity depends only on the
+    physics (K, power mode, pmax, noise power, ota_noise) — a seed sweep
+    reuses one compiled program."""
+    return dataclasses.replace(
+        policy_config(cell, cfg), seed=0, backend="numpy"
+    )
+
+
+def _online_statics(cfg: FLConfig, cell, uplink, policy) -> dict:
+    """The online-only static kwargs of fl_engine.run_horizon_online
+    (merged with :func:`_horizon_statics` at the call sites)."""
+    return dict(
+        scheduler=cfg.scheduler,
+        pcfg=_traced_policy_config(cell, cfg),
+        uplink=uplink,
+        budget_scale=float(cell.bandwidth_hz) * float(cell.slot_seconds),
+        need_norms=bool(getattr(policy, "needs_norms", True)),
+    )
+
+
+def _online_horizon_setup(dataset, shards, cell, cfg: FLConfig, uplink):
+    """Host precompute for one online scanned instance.
+
+    Mirrors :func:`run_federated_learning`'s setup exactly — same PRNG
+    folds, same downlink model — and asks the policy's ``init_traced``
+    for its host aux (the f64-computed, f32-cast solo-rate table), so the
+    traced selection ranks the same numbers the per-round driver's
+    ``select_round`` does.
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    params = get_fl_model(cfg.model).init(key)
+    payload = tree_count(params) * 32
+
+    sizes = np.array([len(s) for s in shards], dtype=np.float64)
+    weights = sizes / sizes.sum()
+
+    dist = chan.sample_positions(jax.random.fold_in(key, 1), cell)
+    gains = np.asarray(
+        chan.sample_round_channels(jax.random.fold_in(key, 2), dist, cell,
+                                   cfg.num_rounds)
+    )
+
+    policy = scheduling.get_policy(cfg.scheduler)
+    aux = policy.init_traced(gains, weights, policy_config(cell, cfg))
+
+    dl_gains = chan.large_scale_gain(dist, cell)
+    dl_time = float(chan.downlink_time_seconds(payload, dl_gains, cell))
+    noise_keys = ota_lib.horizon_keys(cfg.seed, cfg.num_rounds)
+    eval_idx = eval_sample_plan(
+        len(dataset.y_test), cfg.eval_sample, cfg.num_rounds, cfg.seed
+    )
+    return _OnlinePlan(params, payload, gains, weights, sizes, aux["solo"],
+                       noise_keys, dl_time, eval_idx)
+
+
+def _finalize_online_plan(
+    plan: _OnlinePlan, cfg: FLConfig, cell, uplink, dev_tk, mask_tk,
+) -> _HorizonPlan:
+    """Rebuild the host-f64 log tensors from the traced schedule.
+
+    After the horizon's single ``device_get``, the realized (T, K) device
+    ids + validity masks replay through the exact host calls the per-round
+    driver makes — ``scheduling.finalize_round`` for powers/rates,
+    :func:`_round_physics` for budgets/times — so the logged f64 values
+    are bit-identical to per-round's *by construction* (the in-program f32
+    rates priced the budgets the bits were computed from; the logs never
+    read those).
+    """
+    allocator = power_lib.make_power_allocator(
+        cfg.power_mode, cell.max_power_w, cell.noise_power_w
+    )
+    T, K = dev_tk.shape
+    rounds, powers_l, rates_raw = [], [], []
+    total = 0.0
+    for t in range(T):
+        devs = tuple(int(d) for d in dev_tk[t][mask_tk[t]])
+        p_k, r_k = scheduling.finalize_round(
+            devs, t, plan.gains, plan.weights, allocator, cell.noise_power_w
+        )
+        rounds.append(devs)
+        powers_l.append(p_k)
+        rates_raw.append(r_k)
+        if devs:
+            total += float(
+                np.sum(plan.weights[np.asarray(devs, np.intp)] * r_k)
+            )
+    schedule = scheduling.Schedule(
+        rounds, powers_l, rates_raw, total, cfg.scheduler, True
+    )
+
+    dev_out = np.zeros((T, K), np.int32)
+    ksizes = np.zeros(T, np.intp)
+    budgets_tk = np.zeros((T, K), np.float64)
+    aggw_tk = np.zeros((T, K), np.float64)
+    gains_tk = np.zeros((T, K), np.float32)
+    rates_list = []
+    times = np.zeros(T, np.float64)
+    t_wall = 0.0
+    for t in range(T):
+        devs = rounds[t]
+        rates, budgets, round_time = _round_physics(
+            devs, powers_l[t], rates_raw[t], t, plan.gains, cell, uplink,
+            plan.dl_time,
+        )
+        k = len(devs)
+        ksizes[t] = k
+        dev_out[t, :k] = devs
+        budgets_tk[t, :k] = budgets
+        aggw_tk[t, :k] = _agg_weights(plan.sizes, devs)
+        gains_tk[t, :k] = plan.gains[t, list(devs)]
+        rates_list.append(rates)
+        t_wall += round_time
+        times[t] = t_wall
+    return _HorizonPlan(plan.params0, plan.payload, schedule, dev_out,
+                        ksizes, budgets_tk, aggw_tk, gains_tk,
+                        plan.noise_keys, rates_list, times, plan.eval_idx)
+
+
+def _run_horizon_online(
+    dataset,
+    shards: list,
+    cell: chan.CellConfig,
+    cfg: FLConfig,
+    *,
+    uplink,
+    eval_every: int = 1,
+    progress: Optional[Callable[[RoundLog], None]] = None,
+) -> FLResult:
+    """One online-policy horizon as ONE device program, ONE host sync.
+
+    The scan body selects devices (traced policy), allocates powers,
+    prices budgets, trains, quantizes, aggregates and evaluates; the
+    single ``jax.device_get`` below is the horizon's only host round-trip,
+    after which :func:`_finalize_online_plan` rebuilds the f64 logs.
+    """
+    plan = _online_horizon_setup(dataset, shards, cell, cfg, uplink)
+    bank = ClientBank.build(
+        dataset.x_train, dataset.y_train, shards, cfg.batch_size
+    )
+    ebank = EvalBank.build(dataset.x_test, dataset.y_test)
+
+    T = cfg.num_rounds
+    eval_mask = _eval_mask(T, eval_every)
+    eval_full = plan.eval_idx is None
+    eidx = (np.zeros((T, 1), np.int32) if eval_full else plan.eval_idx)
+    # the schedule is decided in-program: every device must fit the
+    # gathered shape, so slice to the bank-wide max batch count (the
+    # all-padding extra batches contribute exactly-zero gradients)
+    nb = bank.n_batches_for(range(cell.num_devices))
+    policy = scheduling.get_policy(cfg.scheduler)
+
+    out = fl_engine.run_horizon_online(
+        plan.params0,
+        jnp.asarray(plan.solo),
+        jnp.asarray(plan.gains, jnp.float32),
+        jnp.asarray(plan.weights, jnp.float32),
+        jnp.asarray(plan.sizes, jnp.float32),
+        jnp.asarray(plan.noise_keys),
+        jnp.asarray(eval_mask), jnp.asarray(eidx),
+        bank.xb, bank.yb, ebank.xe, ebank.ye,
+        nb=int(nb),
+        **_online_statics(cfg, cell, uplink, policy),
+        **_horizon_statics(cfg, plan.payload, eval_full, cell, uplink),
+    )
+    # ONE host sync for the whole horizon: schedule, bits, accuracies and
+    # the final model come back together
+    final, dev_tk, mask_tk, bits_tk, kept_tk, accs_t = jax.device_get(out)
+    hplan = _finalize_online_plan(plan, cfg, cell, uplink, dev_tk, mask_tk)
+    return _assemble_horizon_result(
+        hplan, cfg, uplink, eval_mask, bits_tk, accs_t, final, progress,
+        kept_tk=kept_tk,
+    )
+
+
+def _stack_online_plans(plans):
+    """Host-stack per-instance online plans (same np.stack-not-jnp.stack
+    rationale as :func:`_stack_plans`): returns
+    ``(params_s, solo, gains_f32, keys, eidx, eval_full)``."""
+    params_s = jax.tree_util.tree_map(
+        lambda *ls: jnp.asarray(np.stack([np.asarray(l) for l in ls])),
+        *[p.params0 for p in plans]
+    )
+    solo = np.stack([p.solo for p in plans])
+    gains = np.stack([p.gains for p in plans]).astype(np.float32)
+    keys = np.stack([p.noise_keys for p in plans])
+    eval_full = plans[0].eval_idx is None
+    if eval_full:
+        T = plans[0].solo.shape[0]
+        eidx = np.zeros((len(plans), T, 1), np.int32)
+    else:
+        eidx = np.stack([p.eval_idx for p in plans])
+    return params_s, solo, gains, keys, eidx, eval_full
+
+
+def _run_horizon_vmapped_online(
+    dataset, shards, cell, cfg: FLConfig, seeds, uplink, eval_every,
+) -> list:
+    """Online-policy seed sweep: S traced horizons, one dispatch, one sync."""
+    plans = [
+        _online_horizon_setup(
+            dataset, shards, cell, dataclasses.replace(cfg, seed=s), uplink
+        )
+        for s in seeds
+    ]
+    bank = ClientBank.build(
+        dataset.x_train, dataset.y_train, shards, cfg.batch_size
+    )
+    ebank = EvalBank.build(dataset.x_test, dataset.y_test)
+
+    T = cfg.num_rounds
+    eval_mask = _eval_mask(T, eval_every)
+    params_s, solo, gains, keys, eidx, eval_full = _stack_online_plans(plans)
+    nb = bank.n_batches_for(range(cell.num_devices))
+    policy = scheduling.get_policy(cfg.scheduler)
+
+    out = fl_engine.run_horizon_online_vmapped(
+        params_s,
+        jnp.asarray(solo), jnp.asarray(gains),
+        jnp.asarray(plans[0].weights, jnp.float32),
+        jnp.asarray(plans[0].sizes, jnp.float32),
+        jnp.asarray(keys), jnp.asarray(eval_mask), jnp.asarray(eidx),
+        bank.xb, bank.yb, ebank.xe, ebank.ye,
+        nb=int(nb),
+        **_online_statics(cfg, cell, uplink, policy),
+        **_horizon_statics(cfg, plans[0].payload, eval_full, cell, uplink),
+    )
+    final_s, dev_s, mask_s, bits_s, kept_s, accs_s = jax.device_get(out)
+    results = []
+    for s, plan in enumerate(plans):
+        scfg = dataclasses.replace(cfg, seed=int(seeds[s]))
+        hplan = _finalize_online_plan(
+            plan, scfg, cell, uplink, dev_s[s], mask_s[s]
+        )
+        fp = jax.tree_util.tree_map(lambda l, s=s: jnp.asarray(l[s]), final_s)
+        results.append(_assemble_horizon_result(
+            hplan, scfg, uplink, eval_mask, bits_s[s], accs_s[s], fp,
+            kept_tk=kept_s[s],
+        ))
+    return results
+
+
+def _run_cell_sweep_online(
+    dataset, shards, cell, cfg: FLConfig, C, S, uplink, eval_every,
+    shards_n, inst_seeds,
+) -> list:
+    """Online-policy (cells x seeds) grid — traced horizons end to end.
+
+    Same two execution strategies as :func:`run_cell_sweep`: a 1-shard
+    mesh dispatches one :func:`fl_engine.run_horizon_online` program per
+    instance (shared statics -> one compiled scan for the whole grid);
+    multi-shard runs the stacked (C, S) program under ``shard_map``.
+    """
+    flat = [
+        _online_horizon_setup(
+            dataset, shards, cell,
+            dataclasses.replace(cfg, seed=inst_seeds[c][s]), uplink,
+        )
+        for c in range(C)
+        for s in range(S)
+    ]
+    bank = ClientBank.build(
+        dataset.x_train, dataset.y_train, shards, cfg.batch_size
+    )
+    ebank = EvalBank.build(dataset.x_test, dataset.y_test)
+
+    T = cfg.num_rounds
+    eval_mask = _eval_mask(T, eval_every)
+    params_f, solo, gains, keys, eidx, eval_full = _stack_online_plans(flat)
+    nb = bank.n_batches_for(range(cell.num_devices))
+    policy = scheduling.get_policy(cfg.scheduler)
+    weights_j = jnp.asarray(flat[0].weights, jnp.float32)
+    sizes_j = jnp.asarray(flat[0].sizes, jnp.float32)
+    statics = dict(
+        **_online_statics(cfg, cell, uplink, policy),
+        **_horizon_statics(cfg, flat[0].payload, eval_full, cell, uplink),
+    )
+
+    def finish(i, c, s, final_np, dev_i, mask_i, bits_i, kept_i, accs_i):
+        scfg = dataclasses.replace(cfg, seed=inst_seeds[c][s])
+        hplan = _finalize_online_plan(
+            flat[i], scfg, cell, uplink, dev_i, mask_i
+        )
+        fp = jax.tree_util.tree_map(jnp.asarray, final_np)
+        return _assemble_horizon_result(
+            hplan, scfg, uplink, eval_mask, bits_i, accs_i, fp,
+            kept_tk=kept_i,
+        )
+
+    if shards_n == 1:
+        emask_j = jnp.asarray(eval_mask)
+        results = []
+        for c in range(C):
+            row = []
+            for s in range(S):
+                i = c * S + s
+                out = fl_engine.run_horizon_online(
+                    flat[i].params0,
+                    jnp.asarray(solo[i]), jnp.asarray(gains[i]),
+                    weights_j, sizes_j,
+                    jnp.asarray(keys[i]), emask_j, jnp.asarray(eidx[i]),
+                    bank.xb, bank.yb, ebank.xe, ebank.ye,
+                    nb=int(nb), **statics,
+                )
+                final, dev_i, mask_i, bits_i, kept_i, accs_i = (
+                    jax.device_get(out)
+                )
+                row.append(finish(
+                    i, c, s, final, dev_i, mask_i, bits_i, kept_i, accs_i
+                ))
+            results.append(row)
+        return results
+
+    def cs(a):
+        return a.reshape(C, S, *a.shape[1:])
+
+    solo_cs, gains_cs = cs(solo), cs(gains)
+    keys_cs, eidx_cs = cs(keys), cs(eidx)
+    params_cs = jax.tree_util.tree_map(
+        lambda l: l.reshape(C, S, *l.shape[1:]), params_f
+    )
+    pad = (-C) % shards_n
+    if pad:
+        solo_cs = np.concatenate([solo_cs, solo_cs[:pad]])
+        gains_cs = np.concatenate([gains_cs, gains_cs[:pad]])
+        keys_cs = np.concatenate([keys_cs, keys_cs[:pad]])
+        eidx_cs = np.concatenate([eidx_cs, eidx_cs[:pad]])
+        params_cs = jax.tree_util.tree_map(
+            lambda l: jnp.concatenate([l, l[:pad]]), params_cs
+        )
+
+    out = fl_engine.run_horizon_online_sharded(
+        params_cs,
+        jnp.asarray(solo_cs), jnp.asarray(gains_cs), jnp.asarray(keys_cs),
+        jnp.asarray(eval_mask), jnp.asarray(eidx_cs),
+        weights_j, sizes_j,
+        bank.xb, bank.yb, ebank.xe, ebank.ye,
+        shards=shards_n, nb=int(nb), **statics,
+    )
+    final_cs, dev_cs, mask_cs, bits_cs, kept_cs, accs_cs = jax.device_get(out)
+    results = []
+    for c in range(C):
+        row = []
+        for s in range(S):
+            fp = jax.tree_util.tree_map(
+                lambda l, c=c, s=s: l[c, s], final_cs
+            )
+            row.append(finish(
+                c * S + s, c, s, fp, dev_cs[c, s], mask_cs[c, s],
+                bits_cs[c, s], kept_cs[c, s], accs_cs[c, s],
+            ))
+        results.append(row)
+    return results
+
+
 def run_horizon_vmapped(
     dataset,
     shards: list,
@@ -775,6 +1181,15 @@ def run_horizon_vmapped(
     seeds = [int(s) for s in seeds]
     if not seeds:
         raise ValueError("seeds must be a non-empty sequence")
+    if (scheduling.policy_is_online(cfg.scheduler)
+            and scheduling.policy_is_traced(cfg.scheduler)):
+        if cfg.power_mode == "mapel":
+            raise ValueError(
+                errors.ERR_SCAN_ONLINE_MAPEL.format(scheduler=cfg.scheduler)
+            )
+        return _run_horizon_vmapped_online(
+            dataset, shards, cell, cfg, seeds, uplink, eval_every
+        )
     plans = [
         _horizon_setup(
             dataset, shards, cell, dataclasses.replace(cfg, seed=s), uplink,
@@ -866,6 +1281,16 @@ def run_cell_sweep(
     )
 
     inst_seeds = [[cfg.seed + c * S + s for s in range(S)] for c in range(C)]
+    if (scheduling.policy_is_online(cfg.scheduler)
+            and scheduling.policy_is_traced(cfg.scheduler)):
+        if cfg.power_mode == "mapel":
+            raise ValueError(
+                errors.ERR_SCAN_ONLINE_MAPEL.format(scheduler=cfg.scheduler)
+            )
+        return _run_cell_sweep_online(
+            dataset, shards, cell, cfg, C, S, uplink, eval_every, shards_n,
+            inst_seeds,
+        )
     plans = [
         [
             _horizon_setup(

@@ -33,7 +33,13 @@ the update norm, whose batched reduction order differs from the legacy
 per-device ``_tree_l2`` at the ulp level — a near-exact score tie between
 two devices could in principle resolve differently.  Scores are continuous
 functions of the channel draws, so exact ties do not occur in practice and
-the equality grid pins schedule identity for ``update-aware``.)  The legacy
+the equality grid pins schedule identity for ``update-aware``.  Before any
+observation there is no feedback at all: every path — legacy, batched and
+the traced online scan, whose carry seeds its norms with the same
+constant — substitutes the policy's documented cold-start estimate
+(``COLD_START_NORM``, see ``scheduling.UpdateAwarePolicy``), so round-0
+selection reduces to best-channel on all of them;
+tests/test_policy_scan.py pins this shared behavior.)  The legacy
 loop remains the oracle the batched engine is pinned against
 (``tests/test_fl_engine.py``).
 """
@@ -46,8 +52,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression as comp
+from repro.core import noma
 from repro.core import ota as ota_lib
+from repro.core import power as power_lib
 from repro.core import quantization as qlib
+from repro.core import rates_jax
+from repro.core import scheduling as sched_lib
 from repro.data.client_bank import (
     BucketedClientBank, ClientBank, EvalBank, eval_sample_plan,
 )
@@ -60,12 +70,16 @@ ENGINES = ("legacy", "batched")
 
 HORIZON_MODES = ("per-round", "scan")
 # fl.py driver modes; FLConfig validates ``horizon`` against this tuple.
-# "per-round" dispatches one round at a time from the host (the only mode
-# online policies can run under — they need live FL-state feedback);
-# "scan" folds a precomputed-schedule horizon into ONE device program
-# (:func:`run_horizon` — a lax.scan over rounds), vmappable over seeds
-# (:func:`run_horizon_vmapped`) and shardable over a cell mesh
-# (:func:`run_horizon_sharded`).
+# "per-round" dispatches one round at a time from the host; "scan" folds
+# the whole horizon into ONE device program (a lax.scan over rounds),
+# vmappable over seeds and shardable over a cell mesh.  Precomputed
+# schedules run :func:`run_horizon` (the fl.py driver packs the schedule
+# tensors up front); online policies with the traced protocol run
+# :func:`run_horizon_online`, which folds selection, power allocation and
+# the budget math into the scan body and threads the policy's
+# FL-state feedback (norms/participation/ages) through the carry.
+# Online policies *without* the traced protocol stay per-round only
+# (errors.ERR_SCAN_ONLINE_POLICY).
 
 
 # --------------------------------------------------------------------------
@@ -556,6 +570,257 @@ def run_horizon_sharded(
     return fn(
         params_cs, dev_cstk, budgets_cstk, agg_cstk, gains_cstk, keys_cst,
         eval_mask_t, eval_idx_cstn, xb, yb, xe, ye,
+    )
+
+
+# --------------------------------------------------------------------------
+# Online-policy scanned horizons: selection + power + budgets in the scan
+# --------------------------------------------------------------------------
+
+_ONLINE_STATICS = _HORIZON_STATICS + (
+    "scheduler", "pcfg", "uplink", "budget_scale", "need_norms",
+)
+# run_horizon_online's static kwargs: the precomputed-horizon statics plus
+# the policy name (resolved through the registry at trace time — the
+# registry entry, not a per-call instance, keys the jit cache), the
+# hashable PolicyConfig (fl.py pins its non-physics fields so program
+# identity depends only on K / power mode / cell physics), the uplink
+# branch, the host-folded bandwidth*slot budget factor, and whether the
+# policy consumes the norm feedback.
+
+
+def _online_horizon_core(
+    params, solo_tm, gains_tm, weights_m, sizes_m, keys_t, eval_mask_t,
+    eval_idx_tn, xb, yb, xe, ye,
+    *, scheduler, pcfg, uplink, budget_scale, need_norms, lr, epochs,
+    payload, compress, paper_exact, use_pallas, eval_full, model, topk, ota,
+    ota_noise, ota_threshold, pmax,
+):
+    """One whole *online-policy* horizon as a single ``lax.scan``.
+
+    Where :func:`_horizon_core` consumes a host-precomputed schedule, this
+    scan body runs the policy itself: per round it calls the traced
+    selection protocol (``select_round_traced`` — masked ``lax.top_k``
+    scoring or the matching-pursuit ``lax.while_loop``), allocates powers
+    in closed form (``power.traced_round_powers``), prices the §IV uplink
+    (``rates_jax.sic_rates`` — the same shifted-suffix-sum SIC math the
+    fused GWMIN driver ``rates_jax.greedy_rounds_fused`` scores with — or
+    ``noma.tdma_rates``), converts rates to bit budgets with the
+    host-folded ``bandwidth * slot`` factor, and trains/aggregates through
+    the same :func:`_train_quantize_aggregate` the precomputed scan uses.
+
+    The carry is ``(params, TracedObservation)``: the policy's FL-state
+    feedback — last update norms, participation counts, last-scheduled
+    rounds — never leaves the device.  Carry updates scatter through
+    ``where(mask, dev, M)`` indices: padding lanes point one past the end
+    and JAX's default out-of-bounds-scatter drop discards them, so a
+    padded lane aliasing device 0 can never corrupt device 0's state.
+    The norm carry is seeded with the policy's ``COLD_START_NORM``
+    (fl.py's driver builds the initial observation), though round-0
+    selection only reads the participation zeros — the estimate
+    convention substitutes the same constant either way.
+
+    Emits per-round device ids, validity masks, bit-widths, kept counts
+    and accuracies; the fl.py driver's single ``device_get`` of these is
+    the horizon's ONE host sync, after which it rebuilds the f64 log
+    tensors (rates/budgets/times) with the exact per-round host calls.
+    """
+    policy = sched_lib.get_policy(scheduler)
+    num_devices = int(weights_m.shape[0])
+    num_rounds = int(solo_tm.shape[0])
+    t_arange = jnp.arange(num_rounds, dtype=jnp.int32)
+
+    def body(carry, inp):
+        p, obs = carry
+        t, solo_row, g_row, nk, do_eval, eidx = inp
+        dev, mask = policy.select_round_traced(
+            t, solo_row, g_row, weights_m, obs, pcfg
+        )
+        maskf = mask.astype(jnp.float32)
+        g_k = g_row[dev] * maskf
+        w_k = weights_m[dev] * maskf
+        p_k = power_lib.traced_round_powers(
+            pcfg.power_mode, g_k, w_k, pcfg.pmax
+        )
+        if uplink == "tdma":
+            rates_k = noma.tdma_rates(p_k, g_k, pcfg.noise_power)
+        else:
+            # noma and ota both log the shared-slot SIC rates; padding
+            # lanes transmit zero power, receive zero rate/budget, and
+            # sort behind every live lane in the SIC order
+            rates_k = rates_jax.sic_rates(p_k, g_k, pcfg.noise_power)
+        bud = rates_k * jnp.float32(budget_scale)
+        raw = sizes_m[dev] * maskf
+        agg = raw / jnp.maximum(jnp.sum(raw), 1.0)
+
+        p2, bits, kept, norms_k = _train_quantize_aggregate(
+            p, xb[dev], yb[dev], bud, agg, g_k, nk, lr=lr, epochs=epochs,
+            payload=payload, compress=compress, paper_exact=paper_exact,
+            use_pallas=use_pallas, need_norms=need_norms, model=model,
+            topk=topk, ota=ota, ota_noise=ota_noise,
+            ota_threshold=ota_threshold, pmax=pmax,
+        )
+
+        scat = jnp.where(mask, dev, num_devices)   # padding -> OOB, dropped
+        part2 = obs.participation.at[scat].add(1, mode="drop")
+        last2 = obs.last_round.at[scat].set(t, mode="drop")
+        if need_norms:
+            norms2 = obs.update_norms.at[scat].set(norms_k, mode="drop")
+        else:
+            norms2 = obs.update_norms
+        obs2 = sched_lib.TracedObservation(norms2, part2, last2)
+
+        def ev(q):
+            if eval_full:
+                return model.accuracy(q, xe, ye)
+            return model.accuracy(q, xe[eidx], ye[eidx])
+
+        acc = jax.lax.cond(
+            do_eval, ev, lambda q: jnp.asarray(jnp.nan, jnp.float32), p2
+        )
+        return (p2, obs2), (dev, mask, bits, kept, acc)
+
+    obs0 = sched_lib.TracedObservation.initial(
+        num_devices, getattr(policy, "COLD_START_NORM", 1.0)
+    )
+    (final, _), (dev_tk, mask_tk, bits_t, kept_t, acc_t) = jax.lax.scan(
+        body, (params, obs0),
+        (t_arange, solo_tm, gains_tm, keys_t, eval_mask_t, eval_idx_tn),
+    )
+    return final, dev_tk, mask_tk, bits_t, kept_t, acc_t
+
+
+@functools.partial(jax.jit, static_argnames=_ONLINE_STATICS)
+def run_horizon_online(
+    params, solo_tm, gains_tm, weights_m, sizes_m, keys_t, eval_mask_t,
+    eval_idx_tn, xb, yb, xe, ye,
+    *, nb, scheduler, pcfg, uplink, budget_scale, need_norms, lr, epochs,
+    payload, compress, paper_exact, use_pallas, eval_full, model, topk, ota,
+    ota_noise, ota_threshold, pmax,
+):
+    """One online-policy horizon, one dispatch (see _online_horizon_core).
+
+    ``nb`` slices the bank to the *bank-wide* max batch count: unlike the
+    precomputed scan the schedule is unknown up front, so every device
+    must fit the gathered shape.  The extra all-padding batches contribute
+    exactly-zero gradients (the same invariant :func:`run_horizon`
+    documents), so the deltas — and the norms fed back to the policy —
+    are bit-identical to the per-round engine's group-sliced ones.
+    """
+    return _online_horizon_core(
+        params, solo_tm, gains_tm, weights_m, sizes_m, keys_t, eval_mask_t,
+        eval_idx_tn, xb[:, :nb], yb[:, :nb], xe, ye,
+        scheduler=scheduler, pcfg=pcfg, uplink=uplink,
+        budget_scale=budget_scale, need_norms=need_norms, lr=lr,
+        epochs=epochs, payload=payload, compress=compress,
+        paper_exact=paper_exact, use_pallas=use_pallas, eval_full=eval_full,
+        model=model, topk=topk, ota=ota, ota_noise=ota_noise,
+        ota_threshold=ota_threshold, pmax=pmax,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=_ONLINE_STATICS)
+def run_horizon_online_vmapped(
+    params_s, solo_stm, gains_stm, weights_m, sizes_m, keys_st, eval_mask_t,
+    eval_idx_stn, xb, yb, xe, ye,
+    *, nb, scheduler, pcfg, uplink, budget_scale, need_norms, lr, epochs,
+    payload, compress, paper_exact, use_pallas, eval_full, model, topk, ota,
+    ota_noise, ota_threshold, pmax,
+):
+    """An online-policy seed sweep (S independent horizons), one dispatch.
+
+    Mirrors :func:`run_horizon_vmapped`: the per-seed axis carries the
+    model inits, channel draws (and therefore solo tables) and noise keys;
+    the data weights/sizes, eval cadence, client bank and test set are
+    shared.  Row s is the same program :func:`run_horizon_online` runs for
+    that seed alone.
+    """
+    xbs, ybs = xb[:, :nb], yb[:, :nb]
+
+    def one(p, so, g, nk, ei):
+        return _online_horizon_core(
+            p, so, g, weights_m, sizes_m, nk, eval_mask_t, ei, xbs, ybs,
+            xe, ye,
+            scheduler=scheduler, pcfg=pcfg, uplink=uplink,
+            budget_scale=budget_scale, need_norms=need_norms, lr=lr,
+            epochs=epochs, payload=payload, compress=compress,
+            paper_exact=paper_exact, use_pallas=use_pallas,
+            eval_full=eval_full, model=model, topk=topk, ota=ota,
+            ota_noise=ota_noise, ota_threshold=ota_threshold, pmax=pmax,
+        )
+
+    return jax.vmap(one)(params_s, solo_stm, gains_stm, keys_st, eval_idx_stn)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_online_fn(
+    shards, nb, scheduler, pcfg, uplink, budget_scale, need_norms, lr,
+    epochs, payload, compress, paper_exact, use_pallas, eval_full, model,
+    topk, ota, ota_noise, ota_threshold, pmax,
+):
+    """Build (and cache) the jitted shard_map'd *online* cell sweep —
+    :func:`_sharded_horizon_fn` with the online core and its operand list
+    (solo tables + channel rows instead of precomputed schedule tensors;
+    the shared data weights/sizes replicated like the bank)."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.launch.mesh import cell_mesh
+    from repro.sharding import rules
+
+    mesh = cell_mesh(shards)
+
+    def fn(params_cs, solo, gains, keys, emask, eidx, weights_m, sizes_m,
+           xb, yb, xe, ye):
+        xbs, ybs = xb[:, :nb], yb[:, :nb]
+
+        def per_seed(p, so, g, nk, ei):
+            return _online_horizon_core(
+                p, so, g, weights_m, sizes_m, nk, emask, ei, xbs, ybs,
+                xe, ye,
+                scheduler=scheduler, pcfg=pcfg, uplink=uplink,
+                budget_scale=budget_scale, need_norms=need_norms, lr=lr,
+                epochs=epochs, payload=payload, compress=compress,
+                paper_exact=paper_exact, use_pallas=use_pallas,
+                eval_full=eval_full, model=model, topk=topk, ota=ota,
+                ota_noise=ota_noise, ota_threshold=ota_threshold, pmax=pmax,
+            )
+
+        def per_cell(p, so, g, nk, ei):
+            return jax.vmap(per_seed)(p, so, g, nk, ei)
+
+        return jax.vmap(per_cell)(params_cs, solo, gains, keys, eidx)
+
+    return jax.jit(shard_map(
+        fn, mesh=mesh,
+        in_specs=rules.cell_sweep_online_in_specs(),
+        out_specs=rules.cell_sweep_online_out_specs(),
+        check_rep=False,
+    ))
+
+
+def run_horizon_online_sharded(
+    params_cs, solo_cstm, gains_cstm, keys_cst, eval_mask_t, eval_idx_cstn,
+    weights_m, sizes_m, xb, yb, xe, ye,
+    *, shards, nb, scheduler, pcfg, uplink, budget_scale, need_norms, lr,
+    epochs, payload, compress, paper_exact, use_pallas, eval_full, model,
+    topk, ota, ota_noise, ota_threshold, pmax,
+):
+    """A (C, S) online-policy cells-x-seeds sweep, cell axis sharded.
+
+    Same contract as :func:`run_horizon_sharded`: C must be a multiple of
+    ``shards`` (the fl.py driver pads and unpads), and ``shards = 1`` is
+    exactly the double-vmapped single-device program.
+    """
+    fn = _sharded_online_fn(
+        int(shards), int(nb), scheduler, pcfg, uplink, float(budget_scale),
+        bool(need_norms), float(lr), int(epochs), int(payload),
+        bool(compress), bool(paper_exact), bool(use_pallas), bool(eval_full),
+        model, float(topk), bool(ota), float(ota_noise), float(ota_threshold),
+        float(pmax),
+    )
+    return fn(
+        params_cs, solo_cstm, gains_cstm, keys_cst, eval_mask_t,
+        eval_idx_cstn, weights_m, sizes_m, xb, yb, xe, ye,
     )
 
 

@@ -458,6 +458,43 @@ def ota_align_powers(gains, weights, pmax: float) -> np.ndarray:
     return np.minimum(p, pmax)   # the min-cap guarantees this; belt and braces
 
 
+TRACED_POWER_MODES = ("max", "ota-align")
+# Modes with a closed-form jnp mirror (:func:`traced_round_powers`), i.e.
+# the modes the device-resident online horizon supports.  "mapel" is the
+# host-iterative polyblock search and stays per-round only — config
+# validation pins the rejection (errors.ERR_SCAN_ONLINE_MAPEL).
+
+
+def traced_round_powers(mode: str, gains_k, weights_k, pmax: float):
+    """jnp mirror of :meth:`PowerAllocator.solve` for the traced round body.
+
+    Operates on one masked (K,) group inside the scanned online horizon
+    (``fl_engine._online_horizon_core``): padding lanes arrive with zero
+    gain/weight and are allocated zero power, which zeroes their SIC rate
+    and bit budget — exactly how the host allocator's absence of those
+    lanes plays out.  ``mode`` is static (trace-time dispatch); only the
+    closed-form modes in :data:`TRACED_POWER_MODES` are supported.
+    """
+    import jax.numpy as jnp
+
+    g = jnp.asarray(gains_k)
+    w = jnp.asarray(weights_k)
+    if mode == "max":
+        return jnp.where(g > 0.0, jnp.float32(pmax), 0.0)
+    if mode != "ota-align":
+        raise ValueError(
+            f"power mode {mode!r} has no traced allocator; "
+            f"supported: {TRACED_POWER_MODES}"
+        )
+    live = (g > 0.0) & (w > 0.0)
+    caps = jnp.where(
+        live, pmax * g * g / jnp.maximum(w * w, 1e-30), jnp.inf
+    )
+    eta = jnp.min(caps)     # inf when nothing is live: zeroed below
+    p = jnp.where(live, eta, 0.0) * w * w / jnp.maximum(g * g, 1e-30)
+    return jnp.minimum(p, pmax)
+
+
 @dataclasses.dataclass(frozen=True)
 class PowerAllocator:
     """Power allocation for scheduled NOMA groups, single or batched.

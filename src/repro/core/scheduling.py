@@ -22,6 +22,15 @@ flavours:
     (``respects_c1 = False``) — they trade the paper's one-shot C1
     constraint for long-horizon participation control.
 
+Online policies may additionally implement the **traced protocol**
+(``traced_protocol = True`` plus ``init_traced`` / ``select_round_traced``):
+a jnp mirror of ``select_round`` that runs *inside* the scanned-horizon
+round body (``fl_engine._online_horizon_core``), reading a
+:class:`TracedObservation` threaded through the ``lax.scan`` carry — the
+whole feedback loop stays on device, so ``FLConfig.horizon = "scan"``
+accepts the policy (config validation asks :func:`policy_is_traced`).
+All three registered online policies implement it.
+
 Policies are looked up by name through a registry (:func:`register_policy` /
 :func:`get_policy`); power allocation and rate computation live in one shared
 finalization step (:func:`finalize_schedule` for full horizons,
@@ -57,6 +66,10 @@ How to add a policy
    method).  Declare ``online`` and ``respects_c1`` (and, for online
    policies, ``needs_norms`` — whether the FL loop should compute
    per-device update norms for you; it defaults to True when absent).
+   To run under ``horizon="scan"`` an online policy also implements the
+   traced protocol (``_ScoreTopKPolicy`` subclasses inherit it from a
+   jnp ``_score_traced`` mirror of ``_score``); without it the scanned
+   driver keeps rejecting the policy with the pinned error.
 2. Decorate it with ``@register_policy("my-policy")``.  The name becomes a
    valid ``FLConfig.scheduler`` immediately (config validation reads the
    registry), and ``benchmarks/fig6_schemes.py`` can sweep it by name.
@@ -109,7 +122,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Protocol, Sequence
+from typing import Any, Callable, NamedTuple, Protocol, Sequence
 
 import numpy as np
 
@@ -900,6 +913,54 @@ class Observation:
         return obs
 
 
+class TracedObservation(NamedTuple):
+    """The jnp mirror of :class:`Observation`, threaded through the
+    scanned-horizon ``lax.scan`` carry (``fl_engine._online_horizon_core``).
+
+    A NamedTuple of arrays, so it is a pytree the scan can carry.
+    ``realized_rates`` is omitted on purpose: no registered traced policy
+    reads it (the scores consume the *solo* rate proxy, not the realized
+    SIC rate), and dropping it keeps the carry minimal — add it here (and
+    in the engine's scatter update) if a future policy needs it.
+    """
+
+    update_norms: Any    # (M,) f32 last observed ||delta W_k||; the carry
+                         # seeds these at the policy's COLD_START_NORM
+    participation: Any   # (M,) i32 rounds device k was scheduled so far
+    last_round: Any      # (M,) i32 last round k participated; -1 if never
+
+    @classmethod
+    def initial(cls, num_devices: int,
+                cold_start_norm: float = 1.0) -> "TracedObservation":
+        import jax.numpy as jnp
+
+        return cls(
+            update_norms=jnp.full(num_devices, cold_start_norm, jnp.float32),
+            participation=jnp.zeros(num_devices, jnp.int32),
+            last_round=jnp.full(num_devices, -1, jnp.int32),
+        )
+
+
+def _norm_estimates_traced(obs: "TracedObservation", cold_start: float):
+    """jnp mirror of the shared numpy norm-estimate convention
+    (``UpdateAwarePolicy._score`` / ``MatchingPursuitPolicy._norm_estimates``):
+    devices never yet observed take the running mean of observed norms
+    (``cold_start`` before any observation) and observed-zero norms are
+    floored at 1e-3 of the default, so no device is starved forever."""
+    import jax.numpy as jnp
+
+    seen = obs.participation > 0
+    cnt = jnp.sum(seen.astype(jnp.float32))
+    total = jnp.sum(jnp.where(seen, obs.update_norms, 0.0))
+    default = jnp.where(
+        cnt > 0.0, total / jnp.maximum(cnt, 1.0), jnp.float32(cold_start)
+    )
+    default = jnp.maximum(default, 1e-12)
+    return jnp.where(
+        seen, jnp.maximum(obs.update_norms, 1e-3 * default), default
+    )
+
+
 class SchedulerPolicy(Protocol):
     """The scheduling policy protocol (see module docstring).
 
@@ -910,6 +971,21 @@ class SchedulerPolicy(Protocol):
     policies may additionally declare ``needs_norms`` (default True) —
     set it False to tell the FL loop not to compute per-device update
     norms the policy never reads.
+
+    Online policies opting into the scanned horizon implement the traced
+    protocol on top (``traced_protocol = True``):
+
+        aux = policy.init_traced(gains_tm, weights_m, cfg)   # host, once
+        dev_k, mask_k = policy.select_round_traced(
+            t, solo_m, gains_m, weights_m, obs, cfg)         # traced
+
+    ``init_traced`` returns host numpy float32 aux tensors (currently the
+    (T, M) weighted solo-rate table, computed in float64 and cast once);
+    ``select_round_traced`` receives that table's round-t row plus the
+    round's jnp channel row and a :class:`TracedObservation`, and returns
+    a fixed-shape (K,) int32 device vector with a (K,) bool validity mask
+    (lanes masked False are padding — the engine drops their scatter
+    updates and zeroes their aggregation weights).
     """
 
     name: str
@@ -967,12 +1043,27 @@ def policy_is_online(name: str) -> bool:
     """Whether the policy registered under ``name`` selects from live FL
     state (``online = True``).
 
-    The horizon-mode gate: online policies need host-loop feedback every
-    round, so they can only run under ``FLConfig.horizon = "per-round"`` —
-    config validation and the scanned driver both ask this one question.
-    Raises ValueError for unregistered names (same as :func:`get_policy`).
+    Half of the horizon-mode gate: online policies need FL-state feedback
+    every round, so under ``FLConfig.horizon = "scan"`` they must carry
+    that feedback *inside* the device program via the traced protocol
+    (:func:`policy_is_traced`) — config validation and the scanned driver
+    ask these two questions together.  Raises ValueError for unregistered
+    names (same as :func:`get_policy`).
     """
     return bool(getattr(get_policy(name), "online", False))
+
+
+def policy_is_traced(name: str) -> bool:
+    """Whether the policy registered under ``name`` implements the traced
+    selection protocol (``traced_protocol = True`` + ``init_traced`` /
+    ``select_round_traced`` — see :class:`SchedulerPolicy`).
+
+    The other half of the horizon-mode gate: an *online* policy runs under
+    ``FLConfig.horizon = "scan"`` iff this is True (its selection loop
+    then executes inside ``fl_engine._online_horizon_core``'s scan body).
+    Raises ValueError for unregistered names (same as :func:`get_policy`).
+    """
+    return bool(getattr(get_policy(name), "traced_protocol", False))
 
 
 def build_schedule(
@@ -1118,6 +1209,8 @@ class _ScoreTopKPolicy:
     respects_c1 = False
     needs_norms = False     # True: the FL loop computes ||delta W_k|| per
                             # scheduled device and feeds it back via obs
+    traced_protocol = True  # subclasses supply _score_traced, the jnp
+                            # mirror of _score (same ranking, f32)
 
     def init_state(self, gains_tm, weights_m, cfg: PolicyConfig):
         return {
@@ -1135,6 +1228,30 @@ class _ScoreTopKPolicy:
         k = min(cfg.group_size, len(score))
         top = np.argsort(-score, kind="stable")[:k]
         return tuple(int(d) for d in top), state
+
+    def init_traced(self, gains_tm, weights_m, cfg: PolicyConfig) -> dict:
+        """Host aux for the traced path: the (T, M) weighted solo-rate
+        table, computed in float64 (exactly what ``select_round`` sees)
+        and cast once to the program's float32."""
+        solo = _solo_proxy(
+            np.asarray(gains_tm, np.float64),
+            np.asarray(weights_m, np.float64),
+            cfg.pmax, cfg.noise_power,
+        )
+        return {"solo": np.asarray(solo, np.float32)}
+
+    def select_round_traced(self, t, solo_m, gains_m, weights_m, obs, cfg):
+        """jnp mirror of ``select_round``: top-K of ``_score_traced`` via
+        ``lax.top_k`` (ties to the lower device id, matching the stable
+        descending argsort).  Top-K policies always fill all K lanes, so
+        the validity mask is all-True."""
+        import jax
+        import jax.numpy as jnp
+
+        score = self._score_traced(t, solo_m, obs)
+        k = min(int(cfg.group_size), int(score.shape[0]))
+        _, top = jax.lax.top_k(score, k)
+        return top.astype(jnp.int32), jnp.ones(k, dtype=bool)
 
 
 @register_policy("update-aware")
@@ -1154,15 +1271,24 @@ class UpdateAwarePolicy(_ScoreTopKPolicy):
     """
 
     needs_norms = True
+    COLD_START_NORM = 1.0   # the documented cold-start estimate: stands in
+                            # for ||delta W_k|| before any observation, so
+                            # round 0 reduces to best-channel; the traced
+                            # carry seeds its norms with it too
 
     def _score(self, t, solo, obs):
         norms = obs.update_norms.copy()
         seen = obs.participation > 0
-        default = float(norms[seen].mean()) if seen.any() else 1.0
+        default = (
+            float(norms[seen].mean()) if seen.any() else self.COLD_START_NORM
+        )
         default = max(default, 1e-12)
         norms[~seen] = default
         norms[seen] = np.maximum(norms[seen], 1e-3 * default)
         return norms * solo
+
+    def _score_traced(self, t, solo_m, obs):
+        return _norm_estimates_traced(obs, self.COLD_START_NORM) * solo_m
 
 
 @register_policy("age-fair")
@@ -1179,6 +1305,12 @@ class AgeFairPolicy(_ScoreTopKPolicy):
     def _score(self, t, solo, obs):
         age = (t - obs.last_round).astype(np.float64)
         return (1.0 + age) * solo
+
+    def _score_traced(self, t, solo_m, obs):
+        import jax.numpy as jnp
+
+        age = (t - obs.last_round).astype(jnp.float32)
+        return (1.0 + age) * solo_m
 
 
 @register_policy("matching-pursuit")
@@ -1211,6 +1343,9 @@ class MatchingPursuitPolicy:
     online = True
     respects_c1 = False
     needs_norms = True
+    traced_protocol = True
+    COLD_START_NORM = 1.0   # shared with update-aware: the documented
+                            # stand-in norm before any observation
 
     def init_state(self, gains_tm, weights_m, cfg: PolicyConfig):
         return {
@@ -1219,11 +1354,13 @@ class MatchingPursuitPolicy:
             "cfg": cfg,
         }
 
-    @staticmethod
-    def _norm_estimates(obs: Observation) -> np.ndarray:
+    @classmethod
+    def _norm_estimates(cls, obs: Observation) -> np.ndarray:
         norms = obs.update_norms.copy()
         seen = obs.participation > 0
-        default = float(norms[seen].mean()) if seen.any() else 1.0
+        default = (
+            float(norms[seen].mean()) if seen.any() else cls.COLD_START_NORM
+        )
         default = max(default, 1e-12)
         norms[~seen] = default
         norms[seen] = np.maximum(norms[seen], 1e-3 * default)
@@ -1260,3 +1397,71 @@ class MatchingPursuitPolicy:
             noise_term = max(noise_term, float(pen[j]))
             cur = float(e[j])
         return tuple(selected), state
+
+    def init_traced(self, gains_tm, weights_m, cfg: PolicyConfig) -> dict:
+        """Same aux contract as the top-K policies (the engine feeds every
+        traced policy the solo table); the admit loop itself only reads
+        the channel row, the weights and the norm estimates."""
+        solo = _solo_proxy(
+            np.asarray(gains_tm, np.float64),
+            np.asarray(weights_m, np.float64),
+            cfg.pmax, cfg.noise_power,
+        )
+        return {"solo": np.asarray(solo, np.float32)}
+
+    def select_round_traced(self, t, solo_m, gains_m, weights_m, obs, cfg):
+        """The matching-pursuit sweep as a ``lax.while_loop``: one admit
+        per iteration, stopping at K admissions or the first candidate
+        that fails the strict-decrease test — the same early exit as the
+        numpy loop, so both paths admit identical devices in identical
+        order.  Lanes past the stop count are padding (mask False)."""
+        import jax
+        import jax.numpy as jnp
+
+        m_arr = weights_m * _norm_estimates_traced(obs, self.COLD_START_NORM)
+        energy = m_arr * m_arr
+        lam = float(cfg.ota_noise) ** 2 / max(float(cfg.pmax), 1e-300)
+        if lam > 0.0:
+            safe_g = jnp.where(gains_m > 0.0, gains_m, 1.0)
+            pen = jnp.where(
+                gains_m > 0.0, lam * (m_arr / safe_g) ** 2, jnp.inf
+            )
+        else:
+            pen = jnp.zeros_like(m_arr)   # explicit: avoids 0 * inf = nan
+        k = min(int(cfg.group_size), int(m_arr.shape[0]))
+        inf = jnp.asarray(jnp.inf, m_arr.dtype)
+
+        def cond(c):
+            cnt, _, _, _, _, _, stop = c
+            return jnp.logical_and(cnt < k, jnp.logical_not(stop))
+
+        def step(c):
+            cnt, in_s, residual, noise_term, cur, sel, _ = c
+            cand_noise = jnp.maximum(noise_term, pen)
+            e = jnp.where(in_s, inf, (residual - energy) + cand_noise)
+            j = jnp.argmin(e)              # first occurrence, like numpy
+            admit = e[j] < cur             # strict decrease only
+            sel = sel.at[cnt].set(jnp.where(admit, j.astype(jnp.int32), 0))
+            in_s = in_s.at[j].set(jnp.logical_or(in_s[j], admit))
+            return (
+                cnt + jnp.where(admit, 1, 0).astype(jnp.int32),
+                in_s,
+                jnp.where(admit, residual - energy[j], residual),
+                jnp.where(admit, jnp.maximum(noise_term, pen[j]), noise_term),
+                jnp.where(admit, e[j], cur),
+                sel,
+                jnp.logical_not(admit),
+            )
+
+        total = jnp.sum(energy)
+        c0 = (
+            jnp.zeros((), jnp.int32),
+            jnp.zeros(m_arr.shape[0], dtype=bool),
+            total,
+            jnp.zeros((), m_arr.dtype),
+            total,
+            jnp.zeros(k, jnp.int32),
+            jnp.asarray(False),
+        )
+        cnt, _, _, _, _, sel, _ = jax.lax.while_loop(cond, step, c0)
+        return sel, jnp.arange(k, dtype=jnp.int32) < cnt

@@ -158,3 +158,25 @@ def cell_sweep_out_specs() -> tuple:
     """out_specs: (final params, bits, kept, accuracies), all cell-stacked."""
     c = P(CELL_AXIS)
     return (c, c, c, c)
+
+
+def cell_sweep_online_in_specs() -> tuple:
+    """in_specs for the online-policy cell sweep
+    (fl_engine.run_horizon_online_sharded).
+
+    Positional contract: (params_cs, solo, gains, noise_keys, eval_mask,
+    eval_idx, weights_m, sizes_m, xb, yb, xe, ye) — per-instance stacks
+    (model inits, solo-rate tables, channel rows, noise keys, eval plans)
+    shard their leading cell axis; the eval cadence mask, the shared data
+    weights/sizes, the client bank and the test set are replicated.
+    """
+    c = P(CELL_AXIS)
+    r = P()
+    return (c, c, c, c, r, c, r, r, r, r, r, r)
+
+
+def cell_sweep_online_out_specs() -> tuple:
+    """out_specs: (final params, device ids, validity masks, bits, kept,
+    accuracies), all cell-stacked."""
+    c = P(CELL_AXIS)
+    return (c, c, c, c, c, c)

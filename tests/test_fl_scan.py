@@ -10,7 +10,8 @@ practice bit-identical, since the scan body is the same
 T*K > M empty-tail padding (zero agg weights multiply padded rows out of
 the aggregate exactly), the vmapped seed sweep's row-0 identity, the
 shard_map'd cell sweep (on multi-device hosts), the client-sampled eval
-plan shared by both drivers, and the online-policy rejection.
+plan shared by both drivers, and the untraced-online-policy rejection
+(traced-protocol policies run under the scan — tests/test_policy_scan.py).
 """
 import dataclasses
 
@@ -188,20 +189,78 @@ def test_cell_sweep_sharded_matches_single_mesh(tiny_world):
                                           sharded[c][s].accuracies())
 
 
-def test_scan_rejects_online_policy_at_config_time():
-    with pytest.raises(ValueError,
-                       match="horizon='scan' cannot drive online policy"):
-        FLConfig(num_devices=4, group_size=2, num_rounds=2,
-                 scheduler="update-aware", horizon="scan")
+def _register_untraced_online():
+    """A registered online policy WITHOUT the traced protocol — the
+    rejection case since the built-in online policies all gained
+    ``traced_protocol`` (PR 10).  Callers pop it in a finally block."""
+    from repro.core import scheduling
+
+    @scheduling.register_policy("test-untraced-online")
+    class UntracedOnline(scheduling._ScoreTopKPolicy):
+        traced_protocol = False
+
+    return scheduling
 
 
-def test_scan_rejects_online_policy_called_directly(tiny_world):
+def test_scan_accepts_traced_online_policies_at_config_time():
+    """The built-in online policies carry the traced protocol, so
+    horizon='scan' now accepts them (the equality grid in
+    test_policy_scan.py pins the semantics)."""
+    for name in ("update-aware", "age-fair", "matching-pursuit"):
+        kw = (dict(uplink="ota", compression="none")
+              if name == "matching-pursuit" else {})
+        cfg = FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                       scheduler=name, horizon="scan", power_mode="max",
+                       **kw)
+        assert cfg.horizon == "scan"
+
+
+def test_scan_rejects_untraced_online_policy_at_config_time():
+    scheduling = _register_untraced_online()
+    try:
+        with pytest.raises(
+            ValueError,
+            match="horizon='scan' cannot drive online policy",
+        ):
+            FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                     scheduler="test-untraced-online", horizon="scan")
+    finally:
+        scheduling._REGISTRY.pop("test-untraced-online", None)
+
+
+def test_scan_rejects_untraced_online_policy_called_directly(tiny_world):
     """run_horizon_scanned called with a per-round config must raise the
     same error rather than silently planning an offline schedule."""
     ds, cell, shards = tiny_world
-    cfg = _cfg(m=4, group_size=2, rounds=2, scheduler="update-aware")
-    with pytest.raises(ValueError,
-                       match="horizon='scan' cannot drive online policy"):
+    scheduling = _register_untraced_online()
+    try:
+        cfg = _cfg(m=4, group_size=2, rounds=2,
+                   scheduler="test-untraced-online")
+        with pytest.raises(
+            ValueError,
+            match="horizon='scan' cannot drive online policy",
+        ):
+            fl.run_horizon_scanned(ds, shards, cell, cfg)
+    finally:
+        scheduling._REGISTRY.pop("test-untraced-online", None)
+
+
+def test_scan_online_rejects_mapel_at_config_time():
+    """MAPEL's polyblock search is host-iterative: the traced round body
+    cannot run it, so the scan + online + mapel combo is rejected up
+    front with its own pinned message."""
+    with pytest.raises(ValueError, match="cannot use power_mode='mapel'"):
+        FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                 scheduler="update-aware", power_mode="mapel",
+                 horizon="scan")
+
+
+def test_scan_online_rejects_mapel_called_directly(tiny_world):
+    ds, cell, shards = tiny_world
+    cfg = FLConfig(num_devices=4, group_size=2, num_rounds=2,
+                   scheduler="update-aware", power_mode="mapel",
+                   fl_engine="batched", seed=0)
+    with pytest.raises(ValueError, match="cannot use power_mode='mapel'"):
         fl.run_horizon_scanned(ds, shards, cell, cfg)
 
 

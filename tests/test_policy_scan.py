@@ -1,0 +1,276 @@
+"""Traced online policies inside the scanned horizon (PR 10).
+
+``horizon = "scan"`` now drives the online policies — update-aware,
+age-fair, matching-pursuit — through the traced selection protocol:
+scoring, group selection, power allocation and budget pricing all execute
+inside ``fl_engine._online_horizon_core``'s scan body, with the policy's
+FL-state feedback carried on device.  This file pins the contract against
+the per-round driver:
+
+* the equality grid — {update-aware, age-fair, matching-pursuit} x
+  {noma, ota} plus T*K > M revisit horizons: identical device groups,
+  bit-widths, rates, compression ratios and wall times (the host rebuilds
+  the f64 logs from the realized schedule with the same per-round calls),
+  accuracies equal to f32 tolerance;
+* the vmapped seed sweep's row-0 identity on the online path;
+* the cold-start convention (``COLD_START_NORM``): round 0 of a
+  norm-fed policy ranks by the solo-rate table alone, identically on the
+  per-round and traced paths;
+* compile-count pins: the traced-online scan compiles a CONSTANT number
+  of XLA programs across horizon lengths, and zero on an identical rerun.
+
+Counting protocol: see tests/test_sanitizers.py — counts are
+process-wide, so the counted horizon lengths here (7/12) must stay unique
+across the whole tier-1 suite.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import channel, fl, scheduling
+from repro.data import dirichlet_partition, make_mnist_like
+from tools.flcheck.sanitizers import compile_count
+
+M = 12
+
+POLICIES = ("update-aware", "age-fair", "matching-pursuit")
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_mnist_like(num_samples=800, seed=0)
+    cell = channel.CellConfig(num_devices=M)
+    shards = dirichlet_partition(ds.y_train, M, seed=0)
+    return ds, cell, shards
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    """4-device cell: a 3-round, K=2 horizon revisits devices (T*K > M)."""
+    ds = make_mnist_like(num_samples=400, seed=0)
+    cell = channel.CellConfig(num_devices=4)
+    shards = dirichlet_partition(ds.y_train, 4, seed=0)
+    return ds, cell, shards
+
+
+def _cfg(*, m=M, group_size=3, rounds=4, scheduler="update-aware",
+         uplink="noma", horizon="per-round", seed=0, **kw):
+    base = dict(num_devices=m, group_size=group_size, num_rounds=rounds,
+                scheduler=scheduler, power_mode="max",
+                compression="adaptive", fl_engine="batched",
+                horizon=horizon, uplink=uplink, seed=seed)
+    if uplink == "ota":
+        # the OTA equality runs use a near-noiseless receiver: large
+        # ota_noise makes max-power analog sums diverge on BOTH drivers,
+        # which tests nothing about the scan
+        base.update(compression="none", ota_noise=1e-9)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _run(world, cfg, *, eval_every=1):
+    ds, cell, shards = world
+    return fl.run_federated_learning(ds, shards, cell, cfg,
+                                     eval_every=eval_every)
+
+
+def _assert_equal_runs(a, b, *, acc_atol=0.0):
+    """Same contract as tests/test_fl_scan.py: schedules, bits, rates,
+    ratios and times identical; accuracies bit-equal by default (the scan
+    body runs the same jitted training computation)."""
+    assert [l.devices for l in a.logs] == [l.devices for l in b.logs]
+    for la, lb in zip(a.logs, b.logs):
+        np.testing.assert_array_equal(la.bits, lb.bits)
+        np.testing.assert_array_equal(la.rates, lb.rates)
+        np.testing.assert_array_equal(la.compression_ratios,
+                                      lb.compression_ratios)
+    np.testing.assert_array_equal(a.times(), b.times())
+    np.testing.assert_allclose(a.accuracies(), b.accuracies(), atol=acc_atol)
+    for x, y in zip(jax.tree_util.tree_leaves(a.final_params),
+                    jax.tree_util.tree_leaves(b.final_params)):
+        d = np.abs(np.asarray(x, np.float64) - np.asarray(y, np.float64))
+        assert d.mean() < 1e-6, f"mean param drift {d.mean()}"
+        assert d.max() < 2e-2, f"max param drift {d.max()}"
+
+
+# --------------------------------------------------------------------------
+# equality grid: traced scan vs the per-round online loop
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", POLICIES)
+@pytest.mark.parametrize("uplink", ["noma", "ota"])
+def test_online_scan_equality_grid(world, uplink, scheduler):
+    per_round = _run(world, _cfg(scheduler=scheduler, uplink=uplink))
+    scanned = _run(world, _cfg(scheduler=scheduler, uplink=uplink,
+                               horizon="scan"))
+    _assert_equal_runs(per_round, scanned)
+
+
+@pytest.mark.parametrize("scheduler", POLICIES)
+def test_online_scan_equality_revisit_tail(tiny_world, scheduler):
+    """T*K > M: online policies revisit devices (respects_c1 = False); the
+    traced carry must keep ages/participation/norms straight across the
+    revisits and the padded-lane OOB-drop must never touch device 0."""
+    kw = dict(m=4, group_size=2, rounds=3, scheduler=scheduler, uplink="ota")
+    per_round = _run(tiny_world, _cfg(**kw))
+    scanned = _run(tiny_world, _cfg(horizon="scan", **kw))
+    _assert_equal_runs(per_round, scanned)
+
+
+def test_online_scan_ota_align_matches_per_round(world):
+    """The traced power path covers 'ota-align' too (closed-form truncated
+    channel inversion inside the scan body)."""
+    kw = dict(scheduler="matching-pursuit", uplink="ota",
+              power_mode="ota-align")
+    per_round = _run(world, _cfg(**kw))
+    scanned = _run(world, _cfg(horizon="scan", **kw))
+    _assert_equal_runs(per_round, scanned)
+
+
+def test_online_scan_eval_every_forward_fill(world):
+    """Skipped-eval rounds short-circuit inside the online scan body
+    (lax.cond -> NaN) and the host forward-fills, like the precomputed
+    scan."""
+    per_round = _run(world, _cfg(rounds=4), eval_every=3)
+    scanned = _run(world, _cfg(rounds=4, horizon="scan"), eval_every=3)
+    _assert_equal_runs(per_round, scanned)
+    accs = scanned.accuracies()
+    assert accs[1] == accs[0] and accs[2] == accs[0]
+    assert not np.isnan(accs).any()
+
+
+def test_online_vmapped_row0_matches_single(world):
+    """Row s of the online vmapped sweep is the same traced program the
+    single-seed driver runs — row 0 bit-identical, other seeds distinct."""
+    ds, cell, shards = world
+    cfg = _cfg(rounds=3, horizon="scan")
+    single = fl.run_federated_learning(ds, shards, cell, cfg)
+    sweep = fl.run_horizon_vmapped(ds, shards, cell, cfg, seeds=[0, 1, 2])
+    assert len(sweep) == 3
+    r0 = sweep[0]
+    assert [l.devices for l in r0.logs] == [l.devices for l in single.logs]
+    np.testing.assert_array_equal(r0.accuracies(), single.accuracies())
+    np.testing.assert_array_equal(r0.times(), single.times())
+    for x, y in zip(jax.tree_util.tree_leaves(r0.final_params),
+                    jax.tree_util.tree_leaves(single.final_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert any(
+        [l.devices for l in sweep[s].logs] != [l.devices for l in r0.logs]
+        or not np.array_equal(sweep[s].accuracies(), r0.accuracies())
+        for s in (1, 2)
+    )
+
+
+def test_online_cell_sweep_matches_individual_runs(tiny_world):
+    """Each (cell, seed) instance of the online sweep grid equals the
+    standalone run at that instance's seed."""
+    ds, cell, shards = tiny_world
+    cfg = _cfg(m=4, group_size=2, rounds=3, scheduler="age-fair",
+               horizon="scan")
+    grid = fl.run_cell_sweep(ds, shards, cell, cfg, num_cells=2,
+                             seeds_per_cell=2)
+    for c in range(2):
+        for s in range(2):
+            inst = fl.run_federated_learning(
+                ds, shards, cell, dataclasses.replace(cfg, seed=c * 2 + s))
+            assert ([l.devices for l in grid[c][s].logs]
+                    == [l.devices for l in inst.logs])
+            np.testing.assert_array_equal(grid[c][s].accuracies(),
+                                          inst.accuracies())
+            np.testing.assert_array_equal(grid[c][s].times(), inst.times())
+
+
+# --------------------------------------------------------------------------
+# cold start: the COLD_START_NORM convention, shared by both paths
+# --------------------------------------------------------------------------
+
+def test_cold_start_norm_is_shared_and_documented():
+    """Every norm-fed policy declares its documented cold-start estimate;
+    update-aware and matching-pursuit share the same stand-in."""
+    ua = scheduling.get_policy("update-aware")
+    mp = scheduling.get_policy("matching-pursuit")
+    assert ua.COLD_START_NORM == mp.COLD_START_NORM == 1.0
+
+
+@pytest.mark.parametrize("horizon", ["per-round", "scan"])
+def test_cold_start_round0_ranks_by_solo_rate(world, horizon):
+    """Round 0 of update-aware: no update has been observed, every norm
+    estimate is COLD_START_NORM, so the score reduces to the solo-rate
+    table — the selected group is the solo-rate top-K, identically on the
+    per-round and traced paths (the fl_engine cold-start caveat, pinned)."""
+    ds, cell, shards = world
+    cfg = _cfg(rounds=2, horizon=horizon)
+    res = fl.run_federated_learning(ds, shards, cell, cfg)
+
+    # replay the driver's PRNG folds to get the same channel table
+    key = jax.random.PRNGKey(cfg.seed)
+    dist = channel.sample_positions(jax.random.fold_in(key, 1), cell)
+    gains = np.asarray(channel.sample_round_channels(
+        jax.random.fold_in(key, 2), dist, cell, cfg.num_rounds))
+    sizes = np.array([len(s) for s in shards], dtype=np.float64)
+    weights = sizes / sizes.sum()
+
+    policy = scheduling.get_policy("update-aware")
+    solo = policy.init_traced(gains, weights, fl.policy_config(cell, cfg))[
+        "solo"]
+    expected = tuple(
+        int(d) for d in
+        np.argsort(-solo[0], kind="stable")[:cfg.group_size]
+    )
+    assert res.logs[0].devices == expected
+
+
+# --------------------------------------------------------------------------
+# compile-count pins: the traced-online scan is ONE program per horizon
+# --------------------------------------------------------------------------
+
+CC_M = 6
+
+
+@pytest.fixture(scope="module")
+def compile_world():
+    ds = make_mnist_like(num_samples=300, seed=0)
+    cell = channel.CellConfig(num_devices=CC_M)
+    shards = dirichlet_partition(ds.y_train, CC_M, seed=0)
+    return ds, cell, shards
+
+
+def _ccfg(rounds, *, seed=0):
+    return FLConfig(num_devices=CC_M, group_size=2, num_rounds=rounds,
+                    scheduler="update-aware", power_mode="max",
+                    compression="adaptive", fl_engine="batched",
+                    horizon="scan", seed=seed)
+
+
+def _warm_key_splits(*sizes):
+    key = jax.random.PRNGKey(0)
+    for n in sizes:
+        jax.random.split(key, n)
+
+
+def test_online_scan_compile_count_constant_in_rounds(compile_world):
+    """The traced-online driver compiles a constant number of programs
+    regardless of horizon length — selection, power, budgets, training
+    and eval all live inside the one scanned program (a per-round retrace
+    would scale the count with T), and an identical rerun is fully
+    cached.  The counted sizes 7/12 are suite-unique (see module
+    docstring)."""
+    ds, cell, shards = compile_world
+    fl.run_federated_learning(ds, shards, cell, _ccfg(3))   # warm T=3
+    _warm_key_splits(7, 12)
+    counts = {}
+    for t_rounds in (7, 12):
+        with compile_count() as tally:
+            fl.run_federated_learning(ds, shards, cell, _ccfg(t_rounds))
+        counts[t_rounds] = tally.count
+    assert counts[7] == counts[12], (
+        f"online scan driver compile count scales with rounds: {counts}"
+    )
+    assert counts[7] > 0   # each T is a fresh static shape: must compile
+
+    with compile_count() as tally:
+        fl.run_federated_learning(ds, shards, cell, _ccfg(7))
+    assert tally.count == 0, "identical rerun must be fully cached"

@@ -21,8 +21,9 @@ unique across the whole tier-1 suite: a different test file running the
 same horizon length caches that size's small ``(T,)``-shaped programs and
 skews one side of the comparison (T=2 once measured 1 vs 17 for T=8 in a
 full-suite run — 14 other call sites use ``num_rounds=2``).  Counted
-sizes: rounds 6/11 (scan), 5/9 (per-round), seed-sweep widths 1/4 — keep
-them unused elsewhere.
+sizes: rounds 6/11 (scan), 5/9 (per-round), 7/12 (online scan,
+tests/test_policy_scan.py), seed-sweep widths 1/4 — keep them unused
+elsewhere.
 """
 import jax
 import jax.numpy as jnp
